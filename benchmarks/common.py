@@ -1,0 +1,24 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+DEFAULT_SCALE = 0.01  # Table II datasets scaled for CPU wall-clock runs
+DATASETS = ["R19", "HT", "TC", "AM", "PK"]
+
+
+def timed(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    """Best-of-N wall time in seconds (first call may include compile)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        best = min(best, dt)
+    return best, out
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,90 @@
+"""Paper Fig. 8: speedups of ThunderGP and Graphitron over the
+unoptimized baseline, per algorithm x dataset.
+
+Baseline       = Graphitron engine with every back-end optimization off
+                 (the paper's "handcrafted HLS without optimizations").
+ThunderGP      = the GAS/ECP template engine (PPR/CGAW: unsupported,
+                 reported as 'n/a' — paper Table III).
+Graphitron     = full back-end (burst + cache + shuffle + compaction).
+
+All engines are timed warm (kernels pre-compiled), matching the paper's
+accelerator-execution-time measurements (synthesis excluded).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompileOptions
+from repro.graph.datasets import make_dataset
+from repro.algorithms import sources
+from repro.algorithms.runners import make_warm_runner
+from repro.baselines import thundergp as tg
+from repro.baselines.thundergp import TemplateLimitation
+
+from .common import DATASETS, DEFAULT_SCALE, csv_line, timed
+
+BASE = CompileOptions.baseline()
+FULL = CompileOptions.full()
+
+ALGOS = {
+    "PageRank": (sources.PAGERANK, {"iters": 20}, False),
+    "BFS": (sources.BFS_ECP, {}, False),
+    "SSSP": (sources.SSSP, {}, True),
+    "PPR": (sources.PPR, {"max_iters": 30}, False),
+    "CGAW": (sources.CGAW, {}, True),
+}
+
+
+def _tgp_time(algo, g, gw, root):
+    try:
+        if algo == "PageRank":
+            run = tg.make_warm_pagerank(g, 20)
+        elif algo == "BFS":
+            run = tg.make_warm_bfs(g, root)
+        elif algo == "SSSP":
+            run = tg.make_warm_sssp(gw, root)
+        elif algo == "PPR":
+            tg.ppr_run(g)
+            return None
+        else:
+            tg.cgaw_run(g)
+            return None
+        t, _ = timed(run)
+        return t
+    except TemplateLimitation:
+        return None
+
+
+def main(scale: float = DEFAULT_SCALE, datasets=None) -> list:
+    lines = []
+    for short in datasets or DATASETS:
+        g = make_dataset(short, scale=scale, seed=0)
+        gw = make_dataset(short, scale=scale, seed=0, weighted=True)
+        root = int(np.argmax(g.out_degree))
+        for algo, (src, ov, weighted) in ALGOS.items():
+            graph = gw if weighted else g
+            ov = dict(ov)
+            if algo in ("BFS", "SSSP"):
+                ov["root"] = root
+            run_b = make_warm_runner(src, graph, BASE, ov)
+            run_f = make_warm_runner(src, graph, FULL, ov)
+            t_b, res_b = timed(run_b)
+            t_f, res_f = timed(run_f)
+            t_t = _tgp_time(algo, g, gw, root)
+            sp_t = f"{t_b / t_t:.2f}x" if t_t else "n/a(template)"
+            wr = res_b.stats.edges_traversed / max(res_f.stats.edges_traversed, 1)
+            lines.append(
+                csv_line(
+                    f"fig8.{algo}.{short}",
+                    t_f * 1e6,
+                    f"graphitron_cpu_speedup={t_b / t_f:.2f}x;"
+                    f"work_reduction={wr:.2f}x;thundergp_speedup={sp_t};"
+                    f"baseline_us={t_b * 1e6:.1f}",
+                )
+            )
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

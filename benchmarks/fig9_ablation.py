@@ -1,0 +1,50 @@
+"""Paper Fig. 9: BFS speedups with individual memory-access optimizations
+(burst-only / cache-only / shuffle-only) vs the full composition.
+Warm-engine timing (see fig8)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CompileOptions
+from repro.graph.datasets import make_dataset
+from repro.algorithms import sources
+from repro.algorithms.runners import make_warm_runner
+
+from .common import DATASETS, DEFAULT_SCALE, csv_line, timed
+
+VARIANTS = {
+    "baseline": CompileOptions.baseline(),
+    "withBurst": CompileOptions.with_only("burst"),
+    "withCache": CompileOptions.with_only("cache"),
+    "withShuffle": CompileOptions.with_only("shuffle"),
+    "full": CompileOptions.full(),
+}
+
+
+def main(scale: float = DEFAULT_SCALE, datasets=None) -> list:
+    lines = []
+    for short in datasets or DATASETS:
+        g = make_dataset(short, scale=scale, seed=0)
+        root = int(np.argmax(g.out_degree))
+        t_base = None
+        for name, opts in VARIANTS.items():
+            run = make_warm_runner(sources.BFS_ECP, g, opts, {"root": root})
+            t, res = timed(run)
+            if name == "baseline":
+                t_base = t
+                e_base = res.stats.edges_traversed
+            lines.append(
+                csv_line(
+                    f"fig9.BFS.{short}.{name}",
+                    t * 1e6,
+                    f"cpu_speedup={t_base / t:.2f}x;"
+                    f"work_reduction={e_base / max(res.stats.edges_traversed, 1):.2f}x;"
+                    f"edges={res.stats.edges_traversed}",
+                )
+            )
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

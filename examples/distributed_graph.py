@@ -1,0 +1,57 @@
+"""Multi-chip graph processing: PageRank over 8 (emulated) devices with the
+paper's shuffle network generalized to cross-chip all_to_all.
+
+    PYTHONPATH=src python examples/distributed_graph.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import generators
+from repro.core.dist_engine import partition_graph, make_push_step
+
+
+def main():
+    g = generators.power_law(20_000, 300_000, seed=0)
+    mesh = jax.make_mesh((8,), ("data",))
+    dg = partition_graph(g, mesh)
+    print(f"|V|={g.n_vertices} |E|={g.n_edges} on {dg.n_devices} devices "
+          f"(bucket pad {dg.src_local.shape[-1]})")
+
+    deg = np.maximum(g.out_degree, 1).astype(np.float32)
+    n = dg.n_vertices_padded
+    step = make_push_step(dg, lambda sv, w: sv, "+")
+
+    rank = np.full(n, 0.0, np.float32)
+    rank[: g.n_vertices] = 1.0 / g.n_vertices
+    damp = 0.85
+    degp = np.ones(n, np.float32)
+    degp[: g.n_vertices] = deg
+
+    with mesh:
+        r = jnp.asarray(rank)
+        dp = jnp.asarray(degp)
+        for it in range(20):
+            contrib = step(r / dp)
+            r = 0.15 / g.n_vertices + damp * contrib
+        out = np.asarray(r)[: g.n_vertices]
+
+    # verify against the single-device oracle
+    want = np.full(g.n_vertices, 1.0 / g.n_vertices)
+    for _ in range(20):
+        c = np.zeros(g.n_vertices)
+        np.add.at(c, g.dst, want[g.src] / deg[g.src])
+        want = 0.15 / g.n_vertices + damp * c
+    err = np.abs(out - want).max() / want.max()
+    print(f"20 PageRank supersteps across 8 chips: max rel err vs oracle = {err:.2e}")
+    assert err < 1e-3
+    top = np.argsort(-out)[:5]
+    print("top-5 vertices:", top.tolist())
+
+
+if __name__ == "__main__":
+    main()

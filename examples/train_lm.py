@@ -1,0 +1,71 @@
+"""End-to-end LM training: a ~100M-param qwen3-family model trained for a
+few hundred steps on the synthetic Markov-Zipf corpus, with async atomic
+checkpoints and auto-resume. Kill it mid-run and re-launch: it resumes
+from the last valid checkpoint and regenerates exactly the batches it
+would have seen (restart-safe data).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models import Model
+from repro.train import OptConfig, init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="few hundred (e.g. 300) for the full run; 60 fits a CPU demo")
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_train_lm")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    # ~100M-param member of the qwen3 family (same features: qk-norm, GQA,
+    # tied embeddings); the full-size assigned config is qwen3-0.6b
+    cfg = get_config("qwen3-0.6b").scaled(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=32000,  # ~100M params
+    )
+    print(f"# model: {cfg.param_count() / 1e6:.0f}M params ({cfg.name} family)")
+
+    model = Model(cfg, dtype=jnp.float32, remat=True)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_state(params, opt_cfg)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start, state = mgr.restore_latest({"params": params, "opt": opt_state})
+    if start is not None:
+        params, opt_state = state["params"], state["opt"]
+        print(f"# resumed from step {start}")
+    start = start or 0
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg, n_microbatches=2),
+                      donate_argnums=(0, 1))
+    data = SyntheticLM(cfg, args.seq_len, args.batch, seed=0)
+    print("step,loss,grad_norm,tokens_per_s")
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            tps = (step - start + 1) * args.batch * args.seq_len / max(dt, 1e-9)
+            print(f"{step},{float(m['loss']):.4f},{float(m['grad_norm']):.3f},{tps:.0f}")
+        if (step + 1) % 50 == 0:
+            mgr.save_async(step + 1, {"params": params, "opt": opt_state})
+    mgr.save(args.steps, {"params": params, "opt": opt_state})
+    print(f"# final loss {float(m['loss']):.4f} (init ~{np.log(cfg.vocab_size):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Graphitron-on-TPU — DSL-driven graph processing + LM framework in JAX."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,23 @@
+"""The paper's five evaluation algorithms, written in the Graphitron DSL.
+
+Each algorithm is a ``.gt``-style source string (paper Fig. 1/2 syntax)
+plus a convenience runner. These are the exact programs used by the
+benchmarks and the correctness tests (oracles: networkx / numpy).
+"""
+from .sources import BFS_ECP, BFS_HYBRID, PAGERANK, SSSP, PPR, CGAW, WCC, KCORE
+from .runners import (
+    run_bfs,
+    run_bfs_hybrid,
+    run_pagerank,
+    run_sssp,
+    run_ppr,
+    run_cgaw,
+    run_wcc,
+    run_kcore,
+)
+
+__all__ = [
+    "BFS_ECP", "BFS_HYBRID", "PAGERANK", "SSSP", "PPR", "CGAW", "WCC", "KCORE",
+    "run_bfs", "run_bfs_hybrid", "run_pagerank", "run_sssp", "run_ppr",
+    "run_cgaw", "run_wcc", "run_kcore",
+]

@@ -1,0 +1,3 @@
+from . import thundergp
+
+__all__ = ["thundergp"]

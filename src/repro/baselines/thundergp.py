@@ -1,0 +1,291 @@
+"""ThunderGP-style template engine (the paper's comparison system).
+
+Faithful to ThunderGP's design constraints (paper §II-B, Table III):
+* gather-apply-scatter (GAS) model, **edge-centric only** — every superstep
+  streams ALL edges regardless of frontier size (no direction switching);
+* a fixed template: one user ``scatter_func`` (per-edge update value), one
+  ``gather_func`` (associative reduce), one ``apply_func`` (per-vertex);
+* a fixed property set: ONE vertex property array + the out-degree
+  auxiliary (their template's documented extension) — algorithms needing
+  more properties (PPR) or edge-weight writes (CGAW) raise
+  ``TemplateLimitation``, reproducing Table III's x entries;
+* weights are template *pseudo-weights* (random constants, not loadable,
+  not writable).
+
+The memory path is ThunderGP-optimized (dst-sorted segment reduction +
+degree-relabeled layout) so the performance comparison against Graphitron
+is between two tuned systems, as in the paper.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.storage import GraphData
+
+
+class TemplateLimitation(NotImplementedError):
+    """The algorithm does not fit the GAS template (paper Table III)."""
+
+
+@dataclass
+class GASTemplate:
+    scatter_func: Callable  # (src_prop, pseudo_weight) -> update value
+    gather_func: str  # '+', 'min', 'max'
+    apply_func: Callable  # (old_prop, accumulated, aux) -> new_prop
+    init: Callable  # (n_vertices, out_degree) -> prop array
+    needs_extra_properties: int = 0
+    writes_edge_weights: bool = False
+
+
+@dataclass
+class ThunderGPStats:
+    supersteps: int = 0
+    edges_traversed: int = 0
+    wall_time_s: float = 0.0
+
+
+class ThunderGPEngine:
+    def __init__(self, template: GASTemplate, graph: GraphData, max_weight: int = 64):
+        if template.needs_extra_properties > 1:
+            raise TemplateLimitation(
+                "ThunderGP's template supports one vertex property (+ out-degree)"
+            )
+        if template.writes_edge_weights:
+            raise TemplateLimitation("ThunderGP edge weights are read-only constants")
+        self.t = template
+        # ThunderGP's own layout optimizations
+        self.graph, _ = graph.relabel_by_degree()
+        g = self.graph
+        self.perm = jnp.asarray(g.dst_sort_perm)
+        self.src_s = jnp.asarray(g.src[g.dst_sort_perm])
+        self.dst_s = jnp.asarray(g.dst[g.dst_sort_perm])
+        rng = np.random.default_rng(0)
+        # pseudo weights (random values — paper §IV-C2)
+        self.w_s = jnp.asarray(
+            rng.integers(1, max_weight, g.n_edges).astype(np.float32)[g.dst_sort_perm]
+        )
+        self.out_deg = jnp.asarray(g.out_degree.astype(np.int32))
+        self.stats = ThunderGPStats()
+        self._step = jax.jit(self._superstep)
+
+    def _superstep(self, prop):
+        t = self.t
+        vals = t.scatter_func(prop[self.src_s], self.w_s)
+        seg = {
+            "+": jax.ops.segment_sum,
+            "min": jax.ops.segment_min,
+            "max": jax.ops.segment_max,
+        }[t.gather_func]
+        acc = seg(vals, self.dst_s, self.graph.n_vertices, indices_are_sorted=True)
+        return t.apply_func(prop, acc, self.out_deg)
+
+    def run(self, n_supersteps: int = 0, until_unchanged: bool = False, max_steps: int = 10_000):
+        g = self.graph
+        prop = jnp.asarray(self.t.init(g.n_vertices, np.asarray(self.out_deg)))
+        t0 = time.perf_counter()
+        steps = 0
+        if until_unchanged:
+            while steps < max_steps:
+                new = self._step(prop)
+                steps += 1
+                self.stats.edges_traversed += g.n_edges
+                if bool(jnp.all(new == prop)):
+                    prop = new
+                    break
+                prop = new
+        else:
+            for _ in range(n_supersteps):
+                prop = self._step(prop)
+                steps += 1
+                self.stats.edges_traversed += g.n_edges
+        self.stats.supersteps = steps
+        self.stats.wall_time_s = time.perf_counter() - t0
+        return np.asarray(prop)  # relabeled ids; see run_original_ids
+
+    def run_original_ids(self, orig: GraphData, **kw):
+        out = self.run(**kw)
+        # self.graph was relabeled from `orig`: old2new = argsort order
+        old2new = np.empty(orig.n_vertices, np.int32)
+        old2new[orig.degree_rank] = np.arange(orig.n_vertices, dtype=np.int32)
+        return out[old2new]
+
+
+# --------------------------------------------------------------------------
+# the three algorithms ThunderGP's template can express
+# --------------------------------------------------------------------------
+
+
+def pagerank_template(damp: float = 0.85) -> GASTemplate:
+    return GASTemplate(
+        scatter_func=lambda sp, w: sp,
+        gather_func="+",
+        apply_func=lambda old, acc, deg: (1 - damp) + damp * acc,
+        init=lambda n, deg: np.full(n, 1.0, np.float32),
+    )
+
+
+def pagerank_run(graph: GraphData, iters: int = 20) -> np.ndarray:
+    """PageRank with contribution pre-division folded into apply (the
+    ThunderGP formulation: prop stores rank/deg)."""
+    damp = 0.85
+    t = GASTemplate(
+        scatter_func=lambda sp, w: sp,
+        gather_func="+",
+        apply_func=lambda old, acc, deg: (
+            ((1 - damp) / deg.shape[0] + damp * acc) / jnp.maximum(deg, 1)
+        ).astype(jnp.float32),
+        init=lambda n, deg: (np.full(n, 1.0 / n, np.float32) / np.maximum(deg, 1)),
+    )
+    eng = ThunderGPEngine(t, graph)
+    out = eng.run(n_supersteps=iters)
+    deg = np.asarray(eng.out_deg)
+    res = out * np.maximum(deg, 1)  # undo the /deg storage
+    old2new = np.empty(graph.n_vertices, np.int32)
+    old2new[graph.degree_rank] = np.arange(graph.n_vertices, dtype=np.int32)
+    return res[old2new], eng.stats
+
+
+def bfs_run(graph: GraphData, root: int = 0):
+    INF = np.int32(2**30)
+    t = GASTemplate(
+        scatter_func=lambda sp, w: sp + 1,
+        gather_func="min",
+        apply_func=lambda old, acc, deg: jnp.minimum(old, acc).astype(jnp.int32),
+        init=lambda n, deg: np.full(n, INF, np.int32),
+    )
+    eng = ThunderGPEngine(t, graph)
+    old2new = np.empty(graph.n_vertices, np.int32)
+    old2new[graph.degree_rank] = np.arange(graph.n_vertices, dtype=np.int32)
+    # seed the root then iterate to fixpoint (full edge sweeps — no
+    # frontier, the template's documented inefficiency on traversal algos)
+    prop = jnp.full((graph.n_vertices,), INF, jnp.int32).at[int(old2new[root])].set(0)
+    t0 = time.perf_counter()
+    steps = 0
+    while steps < graph.n_vertices:
+        new = eng._step(prop)
+        new = jnp.minimum(new, prop)
+        steps += 1
+        eng.stats.edges_traversed += graph.n_edges
+        if bool(jnp.all(new == prop)):
+            break
+        prop = new
+    eng.stats.supersteps = steps
+    eng.stats.wall_time_s = time.perf_counter() - t0
+    return np.asarray(prop)[old2new], eng.stats
+
+
+def sssp_run(graph: GraphData, root: int = 0):
+    """SSSP on template *pseudo-weights* (ThunderGP cannot load real
+    weights — paper §IV-C2); distances are over the pseudo-weighted graph."""
+    INF = np.float32(2**30)
+    t = GASTemplate(
+        scatter_func=lambda sp, w: sp + w,
+        gather_func="min",
+        apply_func=lambda old, acc, deg: jnp.minimum(old, acc),
+        init=lambda n, deg: np.full(n, INF, np.float32),
+    )
+    eng = ThunderGPEngine(t, graph)
+    old2new = np.empty(graph.n_vertices, np.int32)
+    old2new[graph.degree_rank] = np.arange(graph.n_vertices, dtype=np.int32)
+    prop = jnp.full((graph.n_vertices,), INF, jnp.float32).at[int(old2new[root])].set(0.0)
+    t0 = time.perf_counter()
+    steps = 0
+    while steps < graph.n_vertices:
+        new = jnp.minimum(eng._step(prop), prop)
+        steps += 1
+        eng.stats.edges_traversed += graph.n_edges
+        if bool(jnp.all(new == prop)):
+            break
+        prop = new
+    eng.stats.supersteps = steps
+    eng.stats.wall_time_s = time.perf_counter() - t0
+    return np.asarray(prop)[old2new], eng.stats
+
+
+def ppr_run(graph: GraphData, source: int = 0):
+    raise TemplateLimitation(
+        "PPR needs per-vertex personalization + convergence properties — "
+        "beyond the template's fixed property set (paper Table III)"
+    )
+
+
+def cgaw_run(graph: GraphData):
+    raise TemplateLimitation(
+        "CGAW writes edge weights — ThunderGP weights are read-only "
+        "pseudo-constants (paper Table III)"
+    )
+
+
+# --------------------------------------------------------------------------
+# warm runners (engine + jit built once; timing covers execution only)
+# --------------------------------------------------------------------------
+
+
+def make_warm_pagerank(graph: GraphData, iters: int = 20):
+    damp = 0.85
+    t = GASTemplate(
+        scatter_func=lambda sp, w: sp,
+        gather_func="+",
+        apply_func=lambda old, acc, deg: (
+            ((1 - damp) / deg.shape[0] + damp * acc) / jnp.maximum(deg, 1)
+        ).astype(jnp.float32),
+        init=lambda n, deg: (np.full(n, 1.0 / n, np.float32) / np.maximum(deg, 1)),
+    )
+    eng = ThunderGPEngine(t, graph)
+
+    def run():
+        eng.stats = ThunderGPStats()
+        return eng.run(n_supersteps=iters)
+
+    run()  # warm
+    return run
+
+
+def _warm_fixpoint(graph: GraphData, t: GASTemplate, root: int, seed_val, dtype):
+    eng = ThunderGPEngine(t, graph)
+    old2new = np.empty(graph.n_vertices, np.int32)
+    old2new[graph.degree_rank] = np.arange(graph.n_vertices, dtype=np.int32)
+    INF = dtype(2 ** 30)
+
+    def run():
+        eng.stats = ThunderGPStats()
+        prop = jnp.full((graph.n_vertices,), INF).at[int(old2new[root])].set(seed_val)
+        steps = 0
+        while steps < graph.n_vertices:
+            new = jnp.minimum(eng._step(prop), prop)
+            steps += 1
+            eng.stats.edges_traversed += graph.n_edges
+            if bool(jnp.all(new == prop)):
+                break
+            prop = new
+        eng.stats.supersteps = steps
+        return np.asarray(prop)[old2new], eng.stats
+
+    run()  # warm
+    return run
+
+
+def make_warm_bfs(graph: GraphData, root: int = 0):
+    t = GASTemplate(
+        scatter_func=lambda sp, w: sp + 1,
+        gather_func="min",
+        apply_func=lambda old, acc, deg: jnp.minimum(old, acc).astype(jnp.int32),
+        init=lambda n, deg: np.full(n, np.int32(2 ** 30), np.int32),
+    )
+    return _warm_fixpoint(graph, t, root, 0, np.int32)
+
+
+def make_warm_sssp(graph: GraphData, root: int = 0):
+    t = GASTemplate(
+        scatter_func=lambda sp, w: sp + w,
+        gather_func="min",
+        apply_func=lambda old, acc, deg: jnp.minimum(old, acc),
+        init=lambda n, deg: np.full(n, np.float32(2 ** 30), np.float32),
+    )
+    return _warm_fixpoint(graph, t, root, 0.0, np.float32)

@@ -1,0 +1,15 @@
+"""Graphitron core: the paper's DSL + compiler, lowered to JAX/Pallas."""
+from .engine import Engine, EngineResult, compile_source, run_source
+from .options import CompileOptions
+from .parser import parse
+from .semantic import analyze
+
+__all__ = [
+    "Engine",
+    "EngineResult",
+    "CompileOptions",
+    "compile_source",
+    "run_source",
+    "parse",
+    "analyze",
+]

@@ -1,0 +1,178 @@
+"""Middle-end IR (MIR) for the Graphitron compiler.
+
+The middle-end traverses the FIR from a global perspective (paper §III-B2)
+and produces:
+
+* a symbol table: graphs, properties (``vector{V}(T)``), host scalars;
+* one :class:`Kernel` per device function with the *Property Detector*
+  results: which properties are read/written, through which index pattern,
+  with which reduction, plus RAW-decoupling and frontier annotations;
+* a :class:`HostProgram` for ``main()`` and any host helper functions;
+* a :class:`MemoryPlan` assigning every property to a device buffer with a
+  dtype and length class (|V| or |E|) — the FPGA memory-channel planning
+  re-targeted at HBM buffers.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from . import fir
+
+
+class KernelKind(enum.Enum):
+    VERTEX = "vertex"  # func f(v: Vertex)
+    EDGE = "edge"  # func f(src: Vertex, dst: Vertex[, w: int|float])
+    HOST = "host"  # zero-parameter functions (incl. main)
+
+
+class IndexPattern(enum.Enum):
+    """How a property access is indexed inside a kernel (Property Detector)."""
+
+    SELF = "self"  # P[v] in a vertex kernel — sequential (burst) access
+    SRC = "src"  # P[src] in an edge kernel — gather along source
+    DST = "dst"  # P[dst] in an edge kernel — scatter along destination
+    NEIGHBOR = "ngh"  # P[ngh] inside a neighbor loop — gather/scatter via CSR
+    CONST = "const"  # P[0] — a global accumulator cell
+    OTHER = "other"  # anything else (computed index)
+
+
+@dataclass(frozen=True)
+class PropAccess:
+    prop: str
+    pattern: IndexPattern
+    reduce_op: Optional[str] = None  # None for plain assign / read
+
+
+@dataclass
+class PropertyInfo:
+    name: str
+    element: str  # 'Vertex' | 'Edge' element name
+    scalar: str  # 'int' | 'float' | 'bool'
+    is_edge: bool = False
+
+
+@dataclass
+class ScalarInfo:
+    name: str
+    scalar: str
+    init: Optional[fir.Expr] = None
+
+
+@dataclass
+class GraphInfo:
+    edgeset_name: str
+    vertexset_name: Optional[str]
+    weighted: bool
+    weight_scalar: Optional[str]  # 'int' | 'float'
+    load_args: List[fir.Expr] = field(default_factory=list)
+
+
+@dataclass
+class FrontierInfo:
+    """A top-level guard ``if cond`` whose cond only reads props at the
+    kernel's primary index — the paper's *Frontier Check* module."""
+
+    cond: fir.Expr
+    props: Set[str] = field(default_factory=set)
+
+
+@dataclass
+class Kernel:
+    name: str
+    kind: KernelKind
+    func: fir.FuncDecl
+    # parameter roles
+    vertex_param: Optional[str] = None  # vertex kernels
+    src_param: Optional[str] = None  # edge kernels
+    dst_param: Optional[str] = None
+    weight_param: Optional[str] = None
+    # Property Detector results
+    reads: List[PropAccess] = field(default_factory=list)
+    writes: List[PropAccess] = field(default_factory=list)
+    scalar_reads: Set[str] = field(default_factory=set)
+    # transforms / annotations
+    snapshot_props: Set[str] = field(default_factory=set)  # RAW decoupling (Fig. 5->6)
+    frontier: Optional[FrontierInfo] = None
+    has_neighbor_loop: bool = False
+    writes_weight: bool = False
+    accumulators: Set[str] = field(default_factory=set)  # props written at const index
+
+    @property
+    def scatter_props(self) -> Set[str]:
+        """Properties written through a scattered index (shuffle path)."""
+        return {
+            w.prop
+            for w in self.writes
+            if w.pattern in (IndexPattern.DST, IndexPattern.NEIGHBOR, IndexPattern.OTHER)
+        }
+
+    @property
+    def sequential_props(self) -> Set[str]:
+        """Properties written at the kernel's own lane (burst-write path)."""
+        return {
+            w.prop
+            for w in self.writes
+            if w.pattern in (IndexPattern.SELF, IndexPattern.SRC)
+        }
+
+
+@dataclass
+class MemoryPlan:
+    """Device buffer plan: property -> (length class, dtype, channel id).
+
+    The FPGA version assigns HBM pseudo-channels; here the channel id is
+    informational (used by the textual codegen dump and by tests asserting
+    the Property Detector found everything).
+    """
+
+    buffers: Dict[str, Tuple[str, str, int]] = field(default_factory=dict)
+
+    def add(self, prop: PropertyInfo):
+        length = "E" if prop.is_edge else "V"
+        self.buffers[prop.name] = (length, prop.scalar, len(self.buffers))
+
+
+@dataclass
+class HostProgram:
+    main: fir.FuncDecl
+    host_funcs: Dict[str, fir.FuncDecl] = field(default_factory=dict)
+
+
+@dataclass
+class Module:
+    """The complete MIR context handed to the back-end."""
+
+    program: fir.Program
+    graph: GraphInfo
+    properties: Dict[str, PropertyInfo] = field(default_factory=dict)
+    scalars: Dict[str, ScalarInfo] = field(default_factory=dict)
+    kernels: Dict[str, Kernel] = field(default_factory=dict)
+    host: Optional[HostProgram] = None
+    memory: MemoryPlan = field(default_factory=MemoryPlan)
+    # degree vectors requested via edges.getOutDegrees()/getInDegrees()
+    degree_props: Dict[str, str] = field(default_factory=dict)  # prop -> 'out'|'in'
+
+    def describe(self) -> str:
+        """Textual MIR dump — the analogue of the generated-OpenCL listing."""
+        lines = [f"graph {self.graph.edgeset_name} (weighted={self.graph.weighted})"]
+        for p in self.properties.values():
+            ln, dt, ch = self.memory.buffers[p.name]
+            lines.append(f"  buffer {p.name}: {dt}[{ln}] @channel{ch}")
+        for s in self.scalars.values():
+            lines.append(f"  host scalar {s.name}: {s.scalar}")
+        for k in self.kernels.values():
+            lines.append(f"  kernel {k.name} [{k.kind.value}]")
+            for r in k.reads:
+                lines.append(f"    read  {r.prop}[{r.pattern.value}]")
+            for w in k.writes:
+                op = f" {w.reduce_op}=" if w.reduce_op else " ="
+                lines.append(f"    write {w.prop}[{w.pattern.value}]{op}")
+            if k.snapshot_props:
+                lines.append(f"    decouple(RAW): snapshot {sorted(k.snapshot_props)}")
+            if k.frontier is not None:
+                lines.append(f"    frontier-check on {sorted(k.frontier.props)}")
+            if k.accumulators:
+                lines.append(f"    accumulators {sorted(k.accumulators)}")
+        return "\n".join(lines)

@@ -1,0 +1,48 @@
+"""Compilation options: which back-end optimizations to compose.
+
+These mirror the ablation axes of paper Fig. 9 (Graphitron-withBurst /
+-withCache / -withShuffle vs full Graphitron) plus the TPU-kernel routing
+switch. ``CompileOptions.baseline()`` is the "handcrafted HLS without
+optimizations" reference configuration from the paper's evaluation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class CompileOptions:
+    # memory-access optimizations (paper §III-C3)
+    burst: bool = True  # partitioned, ascending-src streaming order
+    cache: bool = True  # hub-vertex relabeling (dense VMEM-prefix hub cache)
+    shuffle: bool = True  # dst-binned sorted segment reduction (conflict-free)
+    # pipeline optimizations (paper §III-C1/C2) are always-on semantics-level
+    # transforms (RAW decoupling, RMW normalization) — not toggles.
+    # frontier compaction: only traverse active edges (direction/frontier opt)
+    compact_frontier: bool = True
+    # route scatter-reduce / gather through Pallas TPU kernels
+    pallas: bool = False
+    # dst-range partitions target (VMEM sizing unit); 0 = auto
+    n_partitions: int = 0
+    # interpret=True for Pallas on CPU
+    interpret: bool = True
+
+    @staticmethod
+    def baseline() -> "CompileOptions":
+        """Unoptimized reference: random scatter, no partitioning/caching."""
+        return CompileOptions(
+            burst=False, cache=False, shuffle=False, compact_frontier=False,
+            pallas=False,
+        )
+
+    @staticmethod
+    def with_only(opt: str) -> "CompileOptions":
+        """Fig. 9 ablation points: exactly one memory optimization enabled."""
+        base = CompileOptions.baseline()
+        if opt not in ("burst", "cache", "shuffle"):
+            raise ValueError(f"unknown ablation axis {opt!r}")
+        return replace(base, **{opt: True})
+
+    @staticmethod
+    def full(pallas: bool = False) -> "CompileOptions":
+        return CompileOptions(pallas=pallas)

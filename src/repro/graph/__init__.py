@@ -1,0 +1,4 @@
+from .storage import GraphData, PartitionedEdges
+from . import generators, datasets
+
+__all__ = ["GraphData", "PartitionedEdges", "generators", "datasets"]

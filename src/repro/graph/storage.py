@@ -1,0 +1,176 @@
+"""Graph storage substrate: COO / CSR, partitioning, hub detection.
+
+This is the memory layout layer of the back-end framework (paper Fig. 4):
+
+* **EdgeList (COO)** feeds edge-centric kernels ("Burst Read" of edges).
+* **CSR** feeds vertex-centric kernels (``v.getNeighbors()``).
+* **dst-range partitioning** sizes each destination slice to VMEM (the
+  paper sizes partitions to URAM, §III-D) with ascending-src order inside
+  each partition.
+* **hub relabeling** maps the highest-degree vertices to the lowest ids so
+  a dense prefix of every property vector acts as the hub cache (paper
+  Fig. 7(b)).
+* **dst-sorted permutation** drives the conflict-free shuffle reduction
+  (paper Fig. 7(c)): with a static graph the shuffle network's routing is
+  precomputed as a permutation, and the reduce becomes a sorted segment
+  reduction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class GraphData:
+    """An immutable graph with precomputed access-optimization metadata."""
+
+    n_vertices: int
+    src: np.ndarray  # int32 [E]
+    dst: np.ndarray  # int32 [E]
+    weights: Optional[np.ndarray] = None  # float32/int32 [E] or None
+
+    def __post_init__(self):
+        self.src = np.asarray(self.src, dtype=np.int32)
+        self.dst = np.asarray(self.dst, dtype=np.int32)
+        if self.weights is not None:
+            self.weights = np.asarray(self.weights)
+        if self.src.shape != self.dst.shape:
+            raise ValueError("src/dst shape mismatch")
+
+    # -- basic properties ---------------------------------------------------
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def weighted(self) -> bool:
+        return self.weights is not None
+
+    @cached_property
+    def out_degree(self) -> np.ndarray:
+        return np.bincount(self.src, minlength=self.n_vertices).astype(np.int32)
+
+    @cached_property
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.n_vertices).astype(np.int32)
+
+    # -- CSR (out-edges) ------------------------------------------------------
+    @cached_property
+    def csr(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(indptr[V+1], indices[E], edge_perm[E]): out-adjacency.
+
+        ``edge_perm`` maps CSR slot -> original edge id, so edge weights /
+        edge properties can be gathered for neighbor iteration.
+        """
+        order = np.argsort(self.src, kind="stable").astype(np.int32)
+        indptr = np.zeros(self.n_vertices + 1, dtype=np.int64)
+        np.cumsum(self.out_degree, out=indptr[1:])
+        return indptr, self.dst[order], order
+
+    @cached_property
+    def csc(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(indptr, indices, edge_perm): in-adjacency (pull direction)."""
+        order = np.argsort(self.dst, kind="stable").astype(np.int32)
+        indptr = np.zeros(self.n_vertices + 1, dtype=np.int64)
+        np.cumsum(self.in_degree, out=indptr[1:])
+        return indptr, self.src[order], order
+
+    @cached_property
+    def row_ids(self) -> np.ndarray:
+        """CSR row id per CSR slot: vertex owning each out-edge."""
+        indptr, _, _ = self.csr
+        return np.repeat(
+            np.arange(self.n_vertices, dtype=np.int32),
+            np.diff(indptr).astype(np.int64),
+        )
+
+    # -- shuffle metadata (paper Fig. 7(c)) ------------------------------------
+    @cached_property
+    def dst_sort_perm(self) -> np.ndarray:
+        """Permutation sorting edges by destination (stable).
+
+        The static-graph analogue of the on-the-fly shuffle network: the
+        routing decision is precomputed once, and the runtime reduce is a
+        sorted segment reduction (conflict-free by construction).
+        """
+        return np.argsort(self.dst, kind="stable").astype(np.int32)
+
+    # -- hub cache metadata (paper Fig. 7(b)) ----------------------------------
+    @cached_property
+    def degree_rank(self) -> np.ndarray:
+        """Vertices ordered by (in+out) degree, descending — hubs first."""
+        return np.argsort(-(self.out_degree.astype(np.int64) + self.in_degree)).astype(
+            np.int32
+        )
+
+    def relabel_by_degree(self) -> Tuple["GraphData", np.ndarray]:
+        """Return (relabeled graph, old->new map) with hubs at ids [0, K).
+
+        Property vectors of the relabeled graph keep hub entries in a dense
+        prefix, which is the software analogue of pinning hub vertices in
+        URAM/VMEM: gathers for high-degree vertices hit one small block.
+        """
+        old2new = np.empty(self.n_vertices, dtype=np.int32)
+        old2new[self.degree_rank] = np.arange(self.n_vertices, dtype=np.int32)
+        g = GraphData(
+            self.n_vertices,
+            old2new[self.src],
+            old2new[self.dst],
+            None if self.weights is None else self.weights.copy(),
+        )
+        return g, old2new
+
+    # -- dst-range partitioning (paper §III-D) -------------------------------
+    def partition_by_dst(self, n_partitions: int) -> "PartitionedEdges":
+        """Split edges into ``n_partitions`` contiguous dst ranges.
+
+        Inside each partition edges are ordered by ascending ``src``
+        (paper: "organizes edges (src, dst) into subgraphs with ascending
+        src values within each subpartition") so source-property reads
+        stream near-sequentially while the destination slice stays resident.
+        """
+        n_partitions = max(1, min(n_partitions, self.n_vertices))
+        bounds = np.linspace(0, self.n_vertices, n_partitions + 1).astype(np.int64)
+        part_of_edge = np.searchsorted(bounds[1:], self.dst, side="right")
+        order = np.lexsort((self.src, part_of_edge)).astype(np.int32)
+        counts = np.bincount(part_of_edge, minlength=n_partitions)
+        offsets = np.zeros(n_partitions + 1, dtype=np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return PartitionedEdges(
+            graph=self,
+            n_partitions=n_partitions,
+            vertex_bounds=bounds,
+            edge_order=order,
+            edge_offsets=offsets,
+        )
+
+    # -- convenience ----------------------------------------------------------
+    def with_unit_weights(self) -> "GraphData":
+        if self.weighted:
+            return self
+        return GraphData(self.n_vertices, self.src, self.dst, np.ones(self.n_edges, np.float32))
+
+
+@dataclass
+class PartitionedEdges:
+    """dst-range partitioned edge list (the URAM/VMEM sizing unit)."""
+
+    graph: GraphData
+    n_partitions: int
+    vertex_bounds: np.ndarray  # [P+1] dst-range boundaries
+    edge_order: np.ndarray  # [E] permutation: partitioned order -> edge id
+    edge_offsets: np.ndarray  # [P+1] edge range per partition
+
+    def partition_edges(self, p: int) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+        sl = slice(self.edge_offsets[p], self.edge_offsets[p + 1])
+        ids = self.edge_order[sl]
+        w = None if self.graph.weights is None else self.graph.weights[ids]
+        return self.graph.src[ids], self.graph.dst[ids], w
+
+    @property
+    def max_partition_vertices(self) -> int:
+        return int(np.max(np.diff(self.vertex_bounds)))

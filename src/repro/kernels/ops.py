@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle padding/sorting conventions so callers (the DSL back-end, the
+MoE layer) see clean semantics; the underlying kernels keep hardware-shaped
+contracts (tile multiples, sorted streams).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_to(x: jnp.ndarray, n: int, value) -> jnp.ndarray:
+    pad = n - x.shape[0]
+    if pad <= 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], value, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "op", "interpret", "u", "et"))
+def shuffle_reduce(
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    n_out: int,
+    op: str = "+",
+    *,
+    interpret: bool = True,
+    u: int = 512,
+    et: int = 1024,
+) -> jnp.ndarray:
+    """Scatter-reduce (unsorted) updates into ``n_out`` bins via the Pallas
+    shuffle kernel. Matches ``ref.shuffle_reduce_ref`` exactly."""
+    from .shuffle_reduce import shuffle_reduce_sorted
+
+    n = vals.shape[0]
+    et = min(et, max(128, 1 << (max(1, n) - 1).bit_length()))
+    u = min(u, max(128, 1 << (max(1, n_out) - 1).bit_length()))
+    perm = jnp.argsort(idx)  # the shuffle-routing decision
+    idx_s = idx[perm].astype(jnp.int32)
+    vals_s = vals[perm]
+    n_pad = ((n + et - 1) // et) * et
+    from .ref import _identity
+
+    idx_s = _pad_to(idx_s, n_pad, jnp.int32(2**31 - 1))
+    vals_s = _pad_to(vals_s, n_pad, _identity(op, vals.dtype))
+    out = shuffle_reduce_sorted(
+        vals_s, idx_s, n_out=n_out, op=op, u=u, et=et, interpret=interpret
+    )
+    return out[:n_out]
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "apply_op", "reduce_op", "interpret"))
+def edge_stream(
+    src_vals: jnp.ndarray,
+    weights: jnp.ndarray,
+    dst: jnp.ndarray,
+    active: jnp.ndarray,
+    n_out: int,
+    apply_op: str = "add",
+    reduce_op: str = "min",
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused gather->apply->shuffle->reduce edge pipeline (paper Fig. 4)."""
+    from .edge_stream import edge_stream_call
+
+    return edge_stream_call(
+        src_vals, weights, dst, active, n_out=n_out, apply_op=apply_op,
+        reduce_op=reduce_op, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def moe_gather(
+    tokens_sorted: jnp.ndarray,
+    group_offsets: jnp.ndarray,
+    group_sizes: jnp.ndarray,
+    capacity: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Capacity-binned expert gather via the Pallas dispatch kernel."""
+    from .moe_dispatch import moe_gather_call
+
+    return moe_gather_call(
+        tokens_sorted, group_offsets, group_sizes, capacity, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Blocked online-softmax attention (beyond-paper LM hot-spot kernel)."""
+    from .flash_attention import flash_attention_call
+
+    return flash_attention_call(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )

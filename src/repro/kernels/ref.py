@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the semantics a kernel must reproduce;
+tests sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _identity(op: str, dtype):
+    dtype = jnp.dtype(dtype)
+    if op == "+":
+        return dtype.type(0)
+    if op == "min":
+        return jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) else dtype.type(jnp.inf)
+    if op == "max":
+        return jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) else dtype.type(-jnp.inf)
+    raise ValueError(op)
+
+
+def shuffle_reduce_ref(vals: jnp.ndarray, idx: jnp.ndarray, n_out: int, op: str) -> jnp.ndarray:
+    """Scatter-reduce ``vals`` into ``n_out`` bins; identity elsewhere.
+
+    Out-of-range indices are dropped (padding convention).
+    """
+    out = jnp.full((n_out,), _identity(op, vals.dtype))
+    ok = idx < n_out
+    safe_idx = jnp.where(ok, idx, 0)
+    safe_vals = jnp.where(ok, vals, _identity(op, vals.dtype))
+    if op == "+":
+        return out.at[safe_idx].add(safe_vals)
+    if op == "min":
+        return out.at[safe_idx].min(safe_vals)
+    if op == "max":
+        return out.at[safe_idx].max(safe_vals)
+    raise ValueError(op)
+
+
+def edge_stream_ref(
+    src_vals: jnp.ndarray,  # [E] gathered source-side operand (pre-gathered)
+    weights: jnp.ndarray,  # [E] edge weights (or ones)
+    dst: jnp.ndarray,  # [E] destination ids
+    active: jnp.ndarray,  # [E] bool frontier mask
+    n_out: int,
+    apply_op: str,  # 'add' | 'mul' | 'src' (ignore weight)
+    reduce_op: str,  # '+' | 'min' | 'max'
+) -> jnp.ndarray:
+    """Fused edge pipeline: apply(src_val, w) masked by frontier, reduced by dst."""
+    if apply_op == "add":
+        upd = src_vals + weights
+    elif apply_op == "mul":
+        upd = src_vals * weights
+    elif apply_op == "src":
+        upd = src_vals
+    else:
+        raise ValueError(apply_op)
+    ident = _identity(reduce_op, upd.dtype)
+    upd = jnp.where(active, upd, ident)
+    return shuffle_reduce_ref(upd, dst, n_out, reduce_op)
+
+
+def moe_gather_ref(
+    tokens_sorted: jnp.ndarray,  # [T, D] tokens sorted by expert id
+    group_offsets: jnp.ndarray,  # [E] start row of each expert's group
+    group_sizes: jnp.ndarray,  # [E] tokens routed to each expert
+    capacity: int,
+) -> jnp.ndarray:
+    """Capacity-binned gather: [E, C, D]; overflow dropped, underflow zero."""
+    e = group_offsets.shape[0]
+    d = tokens_sorted.shape[-1]
+    rows = group_offsets[:, None] + jnp.arange(capacity)[None, :]  # [E, C]
+    valid = jnp.arange(capacity)[None, :] < group_sizes[:, None]
+    safe = jnp.clip(rows, 0, tokens_sorted.shape[0] - 1)
+    out = tokens_sorted[safe.reshape(-1)].reshape(e, capacity, d)
+    return jnp.where(valid[..., None], out, 0)
+
+
+def moe_scatter_ref(
+    expert_out: jnp.ndarray,  # [E, C, D]
+    group_offsets: jnp.ndarray,  # [E]
+    group_sizes: jnp.ndarray,  # [E]
+    n_tokens: int,
+) -> jnp.ndarray:
+    """Inverse of moe_gather_ref: back to [T, D] sorted-token order."""
+    e, c, d = expert_out.shape
+    rows = group_offsets[:, None] + jnp.arange(c)[None, :]
+    valid = jnp.arange(c)[None, :] < group_sizes[:, None]
+    flat_rows = jnp.where(valid, rows, n_tokens).reshape(-1)
+    out = jnp.zeros((n_tokens + 1, d), expert_out.dtype)
+    out = out.at[flat_rows].add(expert_out.reshape(-1, d))
+    return out[:n_tokens]
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, H, Lq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    causal: bool = True,
+    window: int = 0,  # 0 = full; >0 = sliding window
+) -> jnp.ndarray:
+    b, h, lq, dh = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    lk = k.shape[2]
+    qi = jnp.arange(lq)[:, None] + (lk - lq)  # align causal offset for decode
+    ki = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

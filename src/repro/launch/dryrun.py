@@ -1,0 +1,414 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) cell this lowers + compiles
+the production step function — ``train_step`` for train shapes, ``forward``
+for prefill, ``decode_step`` for decode — against ShapeDtypeStruct inputs
+(no allocation), prints ``memory_analysis()`` / ``cost_analysis()``, and
+records the collective schedule parsed from the partitioned HLO.
+
+Two phases per cell:
+* ``gate``     — the full-depth scanned model: compile MUST succeed; this
+                 is the pass/fail dry-run artifact (memory numbers come
+                 from here: scan keeps while-body buffers counted once).
+* ``roofline`` — two unrolled reduced-depth compiles (1 and 2 layer-units)
+                 whose cost_analysis difference gives the exact marginal
+                 per-layer FLOPs/bytes/collective-bytes; the full-depth
+                 totals are linear compositions (methodology: EXPERIMENTS.md
+                 §Roofline). Unrolling exposes every layer to the HLO cost
+                 model, which scan hides (a while body is costed once).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh single --phase all
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_supported
+from ..configs.base import ArchConfig, ShapeSpec
+from ..distributed import sharding as shardlib
+from ..models import Model
+from ..models.layers import set_sharding_rules
+from ..train import OptConfig, init_state, make_train_step
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8, "s32": 4,
+    "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: Tuple[str, str]) -> int:
+    dt, dims = tok
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective wire-bytes from partitioned HLO text.
+
+    Heuristics (documented in EXPERIMENTS.md): all-reduce counts 2x its
+    (per-device) buffer (ring send+recv), all-gather / all-to-all /
+    collective-permute count the result buffer, reduce-scatter counts its
+    operand buffer. ``-start`` variants are counted, ``-done`` skipped.
+    """
+    per_op = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        m = re.search(r"=\s+[^=]*?\b(" + "|".join(COLLECTIVES) + r")(-start)?\(", ls)
+        if not m:
+            continue
+        if re.search(r"\b(all-reduce|all-gather|all-to-all|collective-permute|reduce-scatter)-done\b", ls):
+            continue
+        op = m.group(1)
+        shapes = _SHAPE_RE.findall(ls)
+        if not shapes:
+            continue
+        lhs_end = ls.index("=")
+        rhs = ls[lhs_end:]
+        rhs_shapes = _SHAPE_RE.findall(rhs)
+        result_b = sum(_shape_bytes(s) for s in _SHAPE_RE.findall(ls[:lhs_end])) or (
+            _shape_bytes(rhs_shapes[0]) if rhs_shapes else 0
+        )
+        paren = ls[ls.index("(", lhs_end) :] if "(" in ls[lhs_end:] else ""
+        operand_shapes = _SHAPE_RE.findall(paren)
+        operand_b = sum(_shape_bytes(s) for s in operand_shapes)
+        if op == "all-reduce":
+            wire = 2 * result_b
+        elif op == "reduce-scatter":
+            wire = operand_b or result_b
+        else:
+            wire = result_b
+        per_op[op] += wire
+        counts[op] += 1
+    return {"wire_bytes": per_op, "counts": counts,
+            "total_wire_bytes": sum(per_op.values())}
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.frontend != "none":
+            return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.frontend != "none":
+        out = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+    else:
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def _micro_batches(cfg: ArchConfig, shape: ShapeSpec, n_batch_shards: int,
+                   tok_target: int = 16_384) -> int:
+    """Largest power-of-two microbatch count such that each microbatch still
+    covers every DP shard; stop once per-shard tokens <= tok_target."""
+    b = shape.global_batch
+    best = 1
+    m = 1
+    while True:
+        if b % m or (b // m) % n_batch_shards:
+            break
+        best = m
+        if (b // m) * shape.seq_len // n_batch_shards <= tok_target:
+            break
+        m *= 2
+    return best
+
+
+def _reduced_cfg(cfg: ArchConfig, units: int) -> ArchConfig:
+    """Same width, reduced depth: ``units`` layer-units (see dryrun doc)."""
+    if cfg.xlstm and cfg.slstm_every:
+        return cfg.scaled(n_layers=cfg.slstm_every * units)
+    if cfg.ssm and cfg.attn_every:
+        return cfg.scaled(n_layers=cfg.attn_every * units)
+    if cfg.moe:
+        return cfg.scaled(n_layers=cfg.first_dense_layers + units)
+    return cfg.scaled(n_layers=units)
+
+
+def _layer_units(cfg: ArchConfig) -> int:
+    if cfg.xlstm and cfg.slstm_every:
+        return cfg.n_layers // cfg.slstm_every
+    if cfg.ssm and cfg.attn_every:
+        return cfg.n_layers // cfg.attn_every
+    if cfg.moe:
+        return cfg.n_layers - cfg.first_dense_layers
+    return cfg.n_layers
+
+
+# --------------------------------------------------------------------------
+# lower + compile one cell
+# --------------------------------------------------------------------------
+
+
+def _build(model: Model, cfg: ArchConfig, shape: ShapeSpec, mesh, n_micro: int):
+    """Returns (fn, arg_sds, in_shardings, donate)."""
+    batch_sds = input_specs(cfg, shape)
+    params_sds = model.abstract_params()
+    pspecs = shardlib.param_pspecs(mesh, params_sds, model.param_specs())
+    param_sh = shardlib.shardings_of(mesh, pspecs)
+    batch_sh = shardlib.shardings_of(mesh, shardlib.batch_pspecs(mesh, batch_sds))
+
+    if shape.kind == "train":
+        big = cfg.param_count() > 3e11
+        opt_cfg = OptConfig(quantized=big, acc_dtype="bfloat16" if big else "float32")
+        opt_sds = init_state(params_sds, opt_cfg, abstract=True)
+        opt_specs = shardlib.opt_state_pspecs(mesh, opt_sds, pspecs)
+        opt_sh = shardlib.shardings_of(mesh, opt_specs)
+        step = make_train_step(model, opt_cfg, n_microbatches=n_micro, remat=True)
+        return (
+            step,
+            (params_sds, opt_sds, batch_sds),
+            (param_sh, opt_sh, batch_sh),
+            (0, 1),
+            (param_sh, opt_sh, None),  # out_shardings: alias params/opt
+        )
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            logits, _ = model.forward(params, batch)
+            return logits[:, -1, :]
+
+        return fn, (params_sds, batch_sds), (param_sh, batch_sh), (), None
+    # decode
+    cache_sds = model.init_cache(shape.global_batch, shape.seq_len, abstract=True)
+    cache_specs = shardlib.cache_pspecs(
+        mesh, cfg, cache_sds, shape.global_batch,
+        seq_shard=getattr(model, "_cache_seq_shard", False),
+    )
+    cache_sh = shardlib.shardings_of(mesh, cache_specs)
+
+    def fn(params, cache, batch):
+        tok = batch.get("tokens", batch.get("embeds"))
+        return model.decode_step(params, cache, tok)
+
+    return (fn, (params_sds, cache_sds, batch_sds), (param_sh, cache_sh, batch_sh),
+            (1,), (None, cache_sh))
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    phase: str = "all",
+    verbose: bool = True,
+    opt_flags: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """opt_flags (perf-loop toggles, EXPERIMENTS.md §Perf):
+        attn_impl: 'naive'|'chunked'; decode_batch_parallel: bool;
+        moe_token_ep: bool (tokens-move expert sharding)."""
+    opt_flags = opt_flags or {}
+    cfg = get_config(arch)
+    if opt_flags.get("moe_capacity_factor"):
+        cfg = cfg.scaled(moe_capacity_factor=opt_flags["moe_capacity_factor"])
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_batch_shards = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    result: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mesh_shape": dict(mesh.shape),
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }
+    saved_rules = dict(shardlib.LOGICAL_RULES)
+    if opt_flags.get("moe_token_ep"):
+        # tokens-move expert parallelism: keep expert weights resident
+        # (shard ff dim over data) instead of FSDP-gathering d_model shards
+        shardlib.LOGICAL_RULES["expert_dmodel"] = None
+        shardlib.LOGICAL_RULES["expert_ff"] = "data"
+    if opt_flags.get("attn_seq_parallel"):
+        shardlib.LOGICAL_RULES["seq"] = "model"
+    from ..models import attention as _attn
+    _attn.SCORES_DTYPE = jnp.bfloat16 if opt_flags.get("scores_bf16") else jnp.float32
+    set_sharding_rules(
+        {k: shardlib._present(mesh, v) for k, v in shardlib.LOGICAL_RULES.items()},
+        dict(mesh.shape),
+    )
+    result["opt_flags"] = {k: v for k, v in opt_flags.items() if v}
+    mkw = dict(
+        attn_impl=opt_flags.get("attn_impl", "naive"),
+        decode_batch_parallel=bool(opt_flags.get("decode_batch_parallel")),
+        attn_seq_parallel=bool(opt_flags.get("attn_seq_parallel")),
+    )
+    cache_seq_shard = bool(opt_flags.get("cache_seq_shard"))
+    try:
+        with mesh:
+            if phase in ("gate", "all"):
+                t0 = time.time()
+                tok_target = 4_096 if cfg.moe else 16_384
+                n_micro = (_micro_batches(cfg, shape, n_batch_shards, tok_target)
+                           if shape.kind == "train" else 1)
+                model = Model(cfg, **mkw)
+                model._cache_seq_shard = cache_seq_shard
+                fn, sds, shardings, donate, out_sh = _build(model, cfg, shape, mesh, n_micro)
+                jfn = jax.jit(fn, in_shardings=shardings, donate_argnums=donate,
+                              out_shardings=out_sh)
+                lowered = jfn.lower(*sds)
+                compiled = lowered.compile()
+                mem = compiled.memory_analysis()
+                cost = compiled.cost_analysis()
+                mem_d = {}
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes"):
+                    v = getattr(mem, k, None)
+                    if v is not None:
+                        mem_d[k] = int(v)
+                result["gate"] = {
+                    "ok": True,
+                    "n_microbatches": n_micro,
+                    "compile_s": round(time.time() - t0, 1),
+                    "memory_analysis": mem_d,
+                    "cost_flops": float(cost.get("flops", -1)) if cost else None,
+                    "collectives": parse_collectives(compiled.as_text())["counts"],
+                }
+                if verbose:
+                    print(f"[gate] {arch} {shape_name} mesh={result['mesh']} "
+                          f"compile={result['gate']['compile_s']}s mem={mem_d}")
+            if phase in ("roofline", "all"):
+                costs = []
+                for units in (1, 2):
+                    rcfg = _reduced_cfg(cfg, units)
+                    model = Model(rcfg, unroll=True, **mkw)
+                    model._cache_seq_shard = cache_seq_shard
+                    fn, sds, shardings, donate, out_sh = _build(model, rcfg, shape, mesh, 1)
+                    jfn = jax.jit(fn, in_shardings=shardings, donate_argnums=donate,
+                                  out_shardings=out_sh)
+                    compiled = jfn.lower(*sds).compile()
+                    cost = compiled.cost_analysis() or {}
+                    coll = parse_collectives(compiled.as_text())
+                    costs.append({
+                        "units": units,
+                        "flops": float(cost.get("flops", 0.0)),
+                        "bytes": float(cost.get("bytes accessed", 0.0)),
+                        "wire_bytes": coll["total_wire_bytes"],
+                        "collective_counts": coll["counts"],
+                    })
+                L = _layer_units(cfg)
+                comp: Dict[str, Any] = {"units_total": L, "samples": costs}
+                for key in ("flops", "bytes", "wire_bytes"):
+                    c1, c2 = costs[0][key], costs[1][key]
+                    marginal = max(c2 - c1, 0.0)
+                    comp[key] = c1 + (L - 1) * marginal
+                    comp[f"{key}_marginal"] = marginal
+                result["roofline_raw"] = comp
+                if verbose:
+                    print(f"[roofline] {arch} {shape_name} mesh={result['mesh']} "
+                          f"flops={comp['flops']:.3e} bytes={comp['bytes']:.3e} "
+                          f"wire={comp['wire_bytes']:.3e}")
+        result["ok"] = True
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to surface
+        result["ok"] = False
+        result["error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[FAIL] {arch} {shape_name} mesh={result['mesh']}: {result['error']}")
+    finally:
+        from ..models import attention as _attn2
+        _attn2.SCORES_DTYPE = jnp.float32
+        set_sharding_rules(None)
+        shardlib.LOGICAL_RULES.clear()
+        shardlib.LOGICAL_RULES.update(saved_rules)
+    return result
+
+
+def save_result(res: Dict[str, Any]):
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{res['arch']}__{res['shape']}__{res.get('mesh', 'na')}.json"
+    (ARTIFACT_DIR / name).write_text(json.dumps(res, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--phase", choices=["gate", "roofline", "all"], default="all")
+    ap.add_argument("--all", action="store_true", help="run every supported cell")
+    ap.add_argument("--attn-impl", choices=["naive", "chunked"], default="naive")
+    ap.add_argument("--decode-bp", action="store_true")
+    ap.add_argument("--moe-token-ep", action="store_true")
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    ap.add_argument("--attn-sp", action="store_true")
+    ap.add_argument("--moe-cap", type=float, default=0.0)
+    ap.add_argument("--scores-bf16", action="store_true")
+    ap.add_argument("--tag", type=str, default="", help="artifact suffix")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                res = run_cell(arch, shape, mp, phase=args.phase, opt_flags={
+                    "attn_impl": args.attn_impl,
+                    "decode_batch_parallel": args.decode_bp,
+                    "moe_token_ep": args.moe_token_ep,
+                    "cache_seq_shard": args.cache_seq_shard,
+                    "attn_seq_parallel": args.attn_sp,
+                    "moe_capacity_factor": args.moe_cap,
+                    "scores_bf16": args.scores_bf16,
+                })
+                if "skipped" in res:
+                    print(f"[skip] {arch} {shape}: {res['skipped']}")
+                    continue
+                if args.tag:
+                    res["tag"] = args.tag
+                    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+                    name = f"{res['arch']}__{res['shape']}__{res['mesh']}__{args.tag}.json"
+                    (ARTIFACT_DIR / name).write_text(json.dumps(res, indent=2))
+                else:
+                    save_result(res)
+                n_fail += 0 if res.get("ok") else 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells FAILED")
+    print("dry-run complete: all attempted cells compiled")
+
+
+if __name__ == "__main__":
+    main()

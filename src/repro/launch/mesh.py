@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+The dry-run target is a TPU v5e pod slice: 16x16 = 256 chips single-pod,
+(2, 16, 16) = 512 chips multi-pod. Defined as functions so importing the
+module never touches jax device state (device count is locked at first
+jax init — see dryrun.py's XLA_FLAGS preamble).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — the roofline denominators.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (~3 links usable per chip on a 2D torus)

@@ -1,0 +1,4 @@
+from .model import Model
+from . import attention, layers, moe, ssm, xlstm
+
+__all__ = ["Model", "attention", "layers", "moe", "ssm", "xlstm"]

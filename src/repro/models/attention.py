@@ -1,0 +1,387 @@
+"""Attention variants: GQA/MQA (+qk-norm, sliding window, M-RoPE) and MLA.
+
+All variants support three execution modes:
+* ``forward``  — full-sequence training/prefill (causal or bidirectional);
+* ``decode``   — single-token step against a KV cache;
+* sliding-window decode uses a **ring-buffer cache** of size ``window`` so
+  long_500k decode holds O(window) state, not O(L).
+
+MLA (deepseek-v2) caches the *compressed* latent (kv_lora + rope head) and
+supports the **absorbed decode** optimization (projection absorption into
+the query) as a toggle — the paper-faithful baseline decompresses per step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (
+    _init_normal,
+    apply_mrope,
+    apply_rope,
+    head_rmsnorm,
+    mrope_sections,
+    rmsnorm,
+    shd,
+)
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "wq": _init_normal(ks[0], (d, h * hd), s, dtype),
+        "wk": _init_normal(ks[1], (d, hkv * hd), s, dtype),
+        "wv": _init_normal(ks[2], (d, hkv * hd), s, dtype),
+        "wo": _init_normal(ks[3], (h * hd, d), 1.0 / math.sqrt(h * hd), dtype),
+    }
+    specs = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((hd,), dtype)
+        params["k_norm"] = jnp.ones((hd,), dtype)
+        specs["q_norm"] = ("head_dim",)
+        specs["k_norm"] = ("head_dim",)
+    return params, specs
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,  # [Lq]
+    k_pos: jnp.ndarray,  # [Lk]
+    causal: bool,
+    window: int,
+    valid_k: Optional[jnp.ndarray] = None,  # [B, Lk] cache validity
+) -> jnp.ndarray:
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    bias = jnp.where(m, 0.0, -jnp.inf)[None, None]  # [1,1,Lq,Lk]
+    if valid_k is not None:
+        bias = bias + jnp.where(valid_k, 0.0, -jnp.inf)[:, None, None, :]
+    return bias
+
+
+SCORES_DTYPE = jnp.float32  # perf-loop toggle: bf16 halves score traffic
+
+
+def _sdpa(q, k, v, bias):
+    """q:[B,Lq,H,Dh] k/v:[B,Lk,Hkv,Dh] -> [B,Lq,H,Dh].
+
+    Scores are stored in SCORES_DTYPE (f32 default; the perf loop flips to
+    bf16 — the MXU accumulates in f32 either way, and the softmax
+    normalization below always reduces in f32)."""
+    b, lq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    sd = SCORES_DTYPE
+    qf = q.reshape(b, lq, hkv, g, dh).astype(sd)
+    kf = k.astype(sd)
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", qf, kf,
+                        preferred_element_type=sd) / jnp.asarray(math.sqrt(dh), sd)
+    logits = logits + bias.reshape(
+        b if bias.shape[0] > 1 else 1, 1, 1, *bias.shape[-2:]
+    ).astype(sd)
+    m = jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True)
+    e = jnp.exp(logits.astype(jnp.float32) - m).astype(sd)
+    p = e / jnp.maximum(jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True), 1e-30).astype(sd)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(sd),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, lq, h, dh).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, pos1d, causal, window, chunk: int, unroll: bool):
+    """Query-chunked attention: scores are materialized per q-chunk
+    ([B, H, c, Lk] instead of [B, H, Lq, Lk]) — an Lq/c reduction in the
+    attention working set. The Pallas kernel (kernels/flash_attention.py)
+    is the fully-blocked TPU-native version; this path is the
+    GSPMD-compatible lowering the perf loop toggles on."""
+    b, lq, h, dh = q.shape
+    nc = max(1, lq // chunk)
+    while lq % nc:
+        nc -= 1
+    c = lq // nc
+    qc = q.reshape(b, nc, c, h, dh)
+    kpos = pos1d[0]
+
+    def one(qi, i):
+        qpos = jax.lax.dynamic_slice_in_dim(kpos, i * c, c)
+        bias = _mask_bias(qpos, kpos, causal, window)
+        return _sdpa(qi, k, v, bias)
+
+    if unroll:
+        outs = [one(qc[:, i], i) for i in range(nc)]
+        out = jnp.stack(outs, axis=1)
+    else:
+        out = jax.lax.map(lambda iq: one(iq[1], iq[0]),
+                          (jnp.arange(nc), jnp.moveaxis(qc, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1)
+    return out.reshape(b, lq, h, dh)
+
+
+def gqa_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # [B, S, D]
+    positions: jnp.ndarray,  # [B, S] or [3, B, S] for mrope
+    layer_window: int = -1,  # -1: use cfg.sliding_window
+    attn_impl: str = "naive",  # 'naive' | 'chunked'
+    chunk: int = 2048,
+    unroll: bool = False,
+    seq_parallel: bool = False,
+) -> jnp.ndarray:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if seq_parallel:
+        # sequence-parallel attention (perf loop): shard q along SEQ over
+        # the model axis; k/v are gathered once per layer. Avoids the
+        # resharding ping-pong when n_heads doesn't divide the model axis.
+        q = shd(q, "batch", "seq", None, None)
+        k = shd(k, "batch", None, None, None)
+        v = shd(v, "batch", None, None, None)
+    else:
+        q = shd(q, "batch", None, "heads", None)
+        k = shd(k, "batch", None, "kv_heads", None)
+        v = shd(v, "batch", None, "kv_heads", None)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, mrope_sections(hd))
+        k = apply_mrope(k, positions, cfg.rope_theta, mrope_sections(hd))
+        pos1d = positions[0]
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        pos1d = positions
+    window = cfg.sliding_window if layer_window < 0 else layer_window
+    if attn_impl == "chunked" and s > chunk:
+        out = _sdpa_chunked(q, k, v, pos1d, cfg.causal, window, chunk, unroll)
+    else:
+        bias = _mask_bias(pos1d[0], pos1d[0], cfg.causal, window)
+        out = _sdpa(q, k, v, bias)
+    if seq_parallel:
+        out = shd(out, "batch", "seq", None, None)
+    else:
+        out = shd(out, "batch", None, "heads", None)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+# -- decode with (ring-)buffered KV cache ----------------------------------
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    buf = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, buf, hkv, hd), dtype),
+        "v": jnp.zeros((batch, buf, hkv, hd), dtype),
+    }
+
+
+def gqa_decode(
+    p: Params,
+    cfg: ArchConfig,
+    cache: Params,
+    x: jnp.ndarray,  # [B, 1, D]
+    pos: jnp.ndarray,  # scalar int32: index of this token
+    layer_window: int = -1,
+    batch_parallel: bool = False,
+) -> Tuple[jnp.ndarray, Params]:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    if batch_parallel:
+        # decode-sharding optimization: attention runs entirely within the
+        # batch shard — gather the (tiny) q/k/v activations over the model
+        # axis instead of gathering the (huge) KV cache per step
+        q = shd(q, "batch", None, None, None)
+        k = shd(k, "batch", None, None, None)
+        v = shd(v, "batch", None, None, None)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(posb[None], (3, b, 1))
+        q = apply_mrope(q, pos3, cfg.rope_theta, mrope_sections(hd))
+        k = apply_mrope(k, pos3, cfg.rope_theta, mrope_sections(hd))
+    else:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    buf = cache["k"].shape[1]
+    slot = pos % buf if cfg.sliding_window > 0 else jnp.minimum(pos, buf - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    # absolute position of each cache slot
+    if cfg.sliding_window > 0:
+        # ring buffer: slot i holds the latest position congruent to i
+        slots = jnp.arange(buf)
+        abs_pos = pos - ((pos - slots) % buf)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+    else:
+        abs_pos = jnp.arange(buf)
+        valid = abs_pos <= pos
+    window = cfg.sliding_window if layer_window < 0 else layer_window
+    bias = _mask_bias(posb[0], abs_pos, cfg.causal, window, valid[None].repeat(b, 0))
+    out = _sdpa(q, ck, cv, bias)
+    if batch_parallel:
+        out = shd(out, "batch", None, None, None)
+    out = out.reshape(b, 1, h * hd) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# --------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d, h = cfg.d_model, cfg.n_heads
+    hd, rhd, vhd = cfg.resolved_head_dim, cfg.rope_head_dim, cfg.resolved_v_head_dim
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "wq_a": _init_normal(ks[0], (d, qlr), s, dtype),
+        "q_a_norm": jnp.ones((qlr,), dtype),
+        "wq_b": _init_normal(ks[1], (qlr, h * (hd + rhd)), 1.0 / math.sqrt(qlr), dtype),
+        "wkv_a": _init_normal(ks[2], (d, kvlr + rhd), s, dtype),
+        "kv_a_norm": jnp.ones((kvlr,), dtype),
+        "wkv_b": _init_normal(ks[3], (kvlr, h * (hd + vhd)), 1.0 / math.sqrt(kvlr), dtype),
+        "wo": _init_normal(ks[4], (h * vhd, d), 1.0 / math.sqrt(h * vhd), dtype),
+    }
+    specs = {
+        "wq_a": ("embed", "qlora"),
+        "q_a_norm": ("qlora",),
+        "wq_b": ("qlora", "heads"),
+        "wkv_a": ("embed", "kvlora"),
+        "kv_a_norm": ("kvlora",),
+        "wkv_b": ("kvlora", "heads"),
+        "wo": ("heads", "embed"),
+    }
+    return params, specs
+
+
+def _mla_qkv(p, cfg: ArchConfig, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    hd, rhd, vhd = cfg.resolved_head_dim, cfg.rope_head_dim, cfg.resolved_v_head_dim
+    q = rmsnorm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, hd + rhd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]  # [B,S,kvlr+rhd]
+    c_kv = rmsnorm(kv[..., : cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora_rank :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope  # k_rope: [B,S,1,rhd]
+
+
+def mla_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    hd, rhd, vhd = cfg.resolved_head_dim, cfg.rope_head_dim, cfg.resolved_v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    kvb = p["wkv_b"].reshape(cfg.kv_lora_rank, h, hd + vhd)
+    k_nope = jnp.einsum("bsc,chd->bshd", c_kv, kvb[..., :hd])
+    v = jnp.einsum("bsc,chd->bshd", c_kv, kvb[..., hd:])
+    scale = 1.0 / math.sqrt(hd + rhd)
+    logits = (
+        jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                     k_rope[:, :, 0].astype(jnp.float32))
+    ) * scale
+    qp = positions[0]
+    bias = _mask_bias(qp, qp, cfg.causal, 0)
+    logits = logits + bias[0]
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(b, s, h * vhd) @ p["wo"]
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_decode(
+    p: Params,
+    cfg: ArchConfig,
+    cache: Params,
+    x: jnp.ndarray,  # [B, 1, D]
+    pos: jnp.ndarray,
+    absorb: bool = True,
+    batch_parallel: bool = False,
+) -> Tuple[jnp.ndarray, Params]:
+    """MLA decode against the compressed cache.
+
+    absorb=False (paper-faithful baseline): decompress the whole cache to
+    per-head K/V each step — O(S·h·(hd+vhd)) bytes materialized.
+    absorb=True (optimized): fold wkv_b into the query / output so scores
+    are taken directly against the latent — O(S·kvlr) bytes touched.
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    hd, rhd, vhd = cfg.resolved_head_dim, cfg.rope_head_dim, cfg.resolved_v_head_dim
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, posb)
+    if batch_parallel:
+        # same decode-sharding optimization as gqa_decode: keep the latent
+        # cache batch-local; gather only the per-step activations
+        q_nope = shd(q_nope, "batch", None, None, None)
+        q_rope = shd(q_rope, "batch", None, None, None)
+        c_kv = shd(c_kv, "batch", None, None)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv, (0, pos, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], k_rope[:, :, 0], (0, pos, 0))
+    buf = ckv.shape[1]
+    valid = jnp.arange(buf) <= pos
+    scale = 1.0 / math.sqrt(hd + rhd)
+    kvb = p["wkv_b"].reshape(cfg.kv_lora_rank, h, hd + vhd)
+    if absorb:
+        # score side: q_eff = q_nope @ Wk  -> against latent directly
+        q_eff = jnp.einsum("bqhd,chd->bqhc", q_nope.astype(jnp.float32),
+                           kvb[..., :hd].astype(jnp.float32))
+        logits = jnp.einsum("bqhc,bkc->bhqk", q_eff, ckv.astype(jnp.float32))
+    else:
+        k_nope = jnp.einsum("bkc,chd->bkhd", ckv.astype(jnp.float32),
+                            kvb[..., :hd].astype(jnp.float32))
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32), k_nope)
+    logits = logits + jnp.einsum(
+        "bqhd,bkd->bhqk", q_rope.astype(jnp.float32), krope.astype(jnp.float32)
+    )
+    logits = logits * scale
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    att = jax.nn.softmax(logits, axis=-1)  # [B,h,1,S]
+    if absorb:
+        ctx = jnp.einsum("bhqk,bkc->bqhc", att, ckv.astype(jnp.float32))  # latent ctx
+        out = jnp.einsum("bqhc,chd->bqhd", ctx, kvb[..., hd:].astype(jnp.float32))
+    else:
+        v = jnp.einsum("bkc,chd->bkhd", ckv.astype(jnp.float32),
+                       kvb[..., hd:].astype(jnp.float32))
+        out = jnp.einsum("bhqk,bkhd->bqhd", att, v)
+    out = out.astype(x.dtype).reshape(b, 1, h * vhd) @ p["wo"]
+    return out, {"ckv": ckv, "krope": krope}

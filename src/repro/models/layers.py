@@ -1,0 +1,242 @@
+"""Shared layer primitives: norms, MLPs, embeddings, RoPE/M-RoPE.
+
+Pure-JAX (no flax): params are plain pytrees; every init function returns
+(params, logical_axes) mirrored trees so the distributed layer can derive
+PartitionSpecs without name-matching heuristics.
+
+Logical axis names (resolved to mesh axes by distributed.sharding):
+    batch, seq, embed, mlp, heads, kv_heads, head_dim, vocab, experts,
+    layers, conv, state, qlora, kvlora
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+_SHARDING_RULES: Optional[Dict[str, Any]] = None
+_MESH_SIZES: Dict[str, int] = {}
+
+
+def set_sharding_rules(rules: Optional[Dict[str, Any]], mesh_sizes: Optional[Dict[str, int]] = None):
+    """Install logical->mesh axis rules (None disables constraints)."""
+    global _SHARDING_RULES, _MESH_SIZES
+    _SHARDING_RULES = rules
+    _MESH_SIZES = mesh_sizes or {}
+
+
+def _axes_size(axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return _MESH_SIZES.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= _MESH_SIZES.get(a, 1)
+    return n
+
+
+def shd(x: jnp.ndarray, *axes: Optional[str]) -> jnp.ndarray:
+    """Constrain activation sharding by logical axis names. Axes that do
+    not evenly divide the dim are dropped (no uneven-sharding remat); no-op
+    outside a mesh context."""
+    if _SHARDING_RULES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = []
+    used: set = set()
+    for dim, a in zip(x.shape, axes):
+        ma = _SHARDING_RULES.get(a) if a else None
+        if ma is not None:
+            flat = (ma,) if isinstance(ma, str) else tuple(ma)
+            if any(m in used for m in flat) or dim % _axes_size(ma) != 0:
+                ma = None
+            else:
+                used.update(flat)
+        spec.append(ma)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+_ABSTRACT_INIT = False
+
+
+class abstract_init:
+    """Context manager: param initializers return ShapeDtypeStructs.
+
+    Used by the dry-run — trillion-parameter models are never materialized
+    on the host; ``jax.jit(...).lower()`` only needs shapes."""
+
+    def __enter__(self):
+        global _ABSTRACT_INIT
+        self._prev = _ABSTRACT_INIT
+        _ABSTRACT_INIT = True
+
+    def __exit__(self, *exc):
+        global _ABSTRACT_INIT
+        _ABSTRACT_INIT = self._prev
+
+
+def _init_normal(key, shape, scale: float, dtype) -> jnp.ndarray:
+    if _ABSTRACT_INIT:
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return jnp.ones((d,), dtype), ("embed",)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def head_rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm: rmsnorm over the trailing head_dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# --------------------------------------------------------------------------
+# MLP (gated SwiGLU or plain GELU)
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, gated: bool, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(ff)
+    if gated:
+        params = {
+            "wi": _init_normal(ks[0], (d, ff), scale_in, dtype),
+            "wg": _init_normal(ks[1], (d, ff), scale_in, dtype),
+            "wo": _init_normal(ks[2], (ff, d), scale_out, dtype),
+        }
+        specs = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    else:
+        params = {
+            "wi": _init_normal(ks[0], (d, ff), scale_in, dtype),
+            "wo": _init_normal(ks[2], (ff, d), scale_out, dtype),
+        }
+        specs = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    return params, specs
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, gated: bool) -> jnp.ndarray:
+    h = x @ p["wi"]
+    if gated:
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shd(h, "batch", None, "mlp")
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return _init_normal(key, (vocab, d), 1.0 / math.sqrt(d), dtype), ("vocab", "embed")
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup.
+
+    Under SPMD (sharding rules installed) the lookup is a one-hot matmul:
+    with a (vocab x embed)-sharded table, gather/scatter-add would
+    materialize a replicated f32 gradient of the full table; the one-hot
+    contraction keeps both the forward and the backward as fully-sharded
+    matmuls (standard TPU practice)."""
+    if _SHARDING_RULES is not None:
+        onehot = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+        onehot = shd(onehot, "batch", None, "vocab")
+        return onehot @ table
+    return table[ids]
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # [B, S, H, Dh]
+    positions: jnp.ndarray,  # [B, S]
+    theta: float,
+) -> jnp.ndarray:
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,  # [B, S, H, Dh]
+    positions: jnp.ndarray,  # [3, B, S] (t, h, w) position ids
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: rotary halves split into (t, h, w) sections."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, "mrope sections must cover head_dim/2"
+    freqs = rope_freqs(dh, theta)  # [half]
+    # per-frequency position source: section 0 -> t, 1 -> h, 2 -> w
+    sec_id = np.concatenate(
+        [np.full(s, i, np.int32) for i, s in enumerate(sections)]
+    )  # [half]
+    pos = positions.astype(jnp.float32)  # [3, B, S]
+    pos_per_freq = pos[sec_id]  # [half, B, S]
+    angles = jnp.moveaxis(pos_per_freq, 0, -1) * freqs  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Default Qwen2-VL sections scaled to head_dim (16/24/24 at Dh=128)."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy in f32; labels < 0 are masked out."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,575 @@
+"""Model assembly: all ten assigned architectures behind one interface.
+
+Structure per family (scan-over-stacked-layers keeps HLO compact and the
+layer collectives pipelined):
+
+* dense / vlm / audio: ``scan`` over N identical (attn + mlp) blocks;
+* moe (deepseek-v2 / kimi-k2): first ``first_dense_layers`` unstacked dense
+  blocks, then ``scan`` over MoE blocks (shuffle-dispatch experts);
+* hybrid (zamba2): ``scan`` over groups of ``attn_every`` Mamba2 blocks,
+  each group followed by the ONE weight-shared attention block (Zamba's
+  signature trick) — per-group KV caches, shared weights;
+* ssm (xlstm): ``scan`` over groups of (slstm_every-1) mLSTM + 1 sLSTM.
+
+The public surface:
+    init(key) / abstract_params()         params (real / ShapeDtypeStruct)
+    param_specs()                         logical-axis tree for sharding
+    loss(params, batch)                   training loss + metrics
+    forward(params, batch)                logits (prefill/encoder path)
+    init_cache(batch, max_len)            decode cache pytree
+    decode_step(params, cache, token,pos) one-token serve step
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import (
+    _init_normal,
+    abstract_init,
+    embed_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    shd,
+    softmax_xent,
+)
+
+Params = Dict[str, Any]
+
+
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _stack_template(template, n: int, abstract: bool, key=None, rebuild=None):
+    """Stack single-layer params along a new leading 'layers' axis.
+
+    abstract: template leaves -> ShapeDtypeStruct with (n, ...) shape.
+    real: re-run the per-layer initializer ``rebuild(key_i)`` n times and
+    jnp.stack (smoke-test sizes only)."""
+    if abstract:
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((n,) + tuple(l.shape), l.dtype), template
+        )
+    keys = jax.random.split(key, n)
+    per_layer = [rebuild(keys[i]) for i in range(n)]
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *per_layer)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, dtype=jnp.bfloat16, unroll: bool = False,
+                 remat: bool = False, attn_impl: str = "naive",
+                 decode_batch_parallel: bool = False, attn_seq_parallel: bool = False):
+        self.cfg = cfg
+        self.dtype = dtype
+        # perf-loop toggles (EXPERIMENTS.md §Perf):
+        #   attn_impl='chunked'      — query-chunked attention (HBM term)
+        #   decode_batch_parallel    — batch-local decode attention (ICI term)
+        self.attn_impl = attn_impl
+        self.decode_batch_parallel = decode_batch_parallel
+        self.attn_seq_parallel = attn_seq_parallel
+        # 2D activation sharding: residual stream carries (batch, seq)
+        self._seq_ax = "seq" if attn_seq_parallel else None
+        # unroll=True replaces scan-over-layers with a python loop so the
+        # compiled HLO exposes every layer to cost_analysis (used by the
+        # roofline lowering; production/training uses scan for compact HLO)
+        self.unroll = unroll
+        # remat=True checkpoints each layer-unit: backward recomputes the
+        # layer instead of saving its intermediates (activation memory is
+        # O(layers * d_model) carries instead of O(layers * everything))
+        self.remat = remat
+
+    def _maybe_scan(self, body, x, xs):
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        if not self.unroll:
+            return jax.lax.scan(body, x, xs)
+        length = jax.tree.leaves(xs)[0].shape[0]
+        ys = []
+        for i in range(length):
+            x, y = body(x, jax.tree.map(lambda l: l[i], xs))
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+        else:
+            ys = None
+        return x, ys
+
+    # ------------------------------------------------------------------
+    # parameter construction
+    # ------------------------------------------------------------------
+    def _dense_block_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        a, a_specs = (
+            attn.mla_init(ks[0], cfg, self.dtype)
+            if cfg.mla
+            else attn.gqa_init(ks[0], cfg, self.dtype)
+        )
+        m, m_specs = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, self.dtype)
+        p = {"ln1": jnp.ones((cfg.d_model,), self.dtype), "attn": a,
+             "ln2": jnp.ones((cfg.d_model,), self.dtype), "mlp": m}
+        s = {"ln1": ("embed",), "attn": a_specs, "ln2": ("embed",), "mlp": m_specs}
+        return p, s
+
+    def _moe_block_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        a, a_specs = (
+            attn.mla_init(ks[0], cfg, self.dtype)
+            if cfg.mla
+            else attn.gqa_init(ks[0], cfg, self.dtype)
+        )
+        m, m_specs = moe_mod.moe_init(ks[1], cfg, self.dtype)
+        p = {"ln1": jnp.ones((cfg.d_model,), self.dtype), "attn": a,
+             "ln2": jnp.ones((cfg.d_model,), self.dtype), "moe": m}
+        s = {"ln1": ("embed",), "attn": a_specs, "ln2": ("embed",), "moe": m_specs}
+        return p, s
+
+    def _mamba_block_init(self, key):
+        cfg = self.cfg
+        m, m_specs = ssm_mod.mamba2_init(key, cfg, self.dtype)
+        p = {"ln1": jnp.ones((cfg.d_model,), self.dtype), "mamba": m}
+        s = {"ln1": ("embed",), "mamba": m_specs}
+        return p, s
+
+    def _mlstm_block_init(self, key):
+        cfg = self.cfg
+        m, m_specs = xlstm_mod.mlstm_init(key, cfg, self.dtype)
+        return ({"ln1": jnp.ones((cfg.d_model,), self.dtype), "mlstm": m},
+                {"ln1": ("embed",), "mlstm": m_specs})
+
+    def _slstm_block_init(self, key):
+        cfg = self.cfg
+        m, m_specs = xlstm_mod.slstm_init(key, cfg, self.dtype)
+        return ({"ln1": jnp.ones((cfg.d_model,), self.dtype), "slstm": m},
+                {"ln1": ("embed",), "slstm": m_specs})
+
+    def init_with_specs(self, key, abstract: bool = False):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        ctx = abstract_init() if abstract else _nullctx()
+        with ctx:
+            emb, emb_spec = embed_init(ks[0], cfg.vocab_size, cfg.d_model, self.dtype)
+            params: Params = {"embed": emb, "final_norm": jnp.ones((cfg.d_model,), self.dtype)}
+            specs: Params = {"embed": emb_spec, "final_norm": ("embed",)}
+            if not cfg.tie_embeddings:
+                params["lm_head"] = _init_normal(
+                    ks[1], (cfg.d_model, cfg.vocab_size), 1.0 / math.sqrt(cfg.d_model),
+                    self.dtype,
+                )
+                specs["lm_head"] = ("embed", "vocab")
+            if cfg.frontend != "none":
+                params["frontend_proj"] = _init_normal(
+                    ks[2], (cfg.d_model, cfg.d_model), 1.0 / math.sqrt(cfg.d_model),
+                    self.dtype,
+                )
+                specs["frontend_proj"] = ("embed", "embed2")
+
+            if cfg.xlstm:
+                g, rem = self._xlstm_groups()
+                t_m, s_m = self._mlstm_block_init(ks[3])
+                tmpl_m = jax.tree.map(_sds, t_m)
+                # group stacks: [G, rem, ...]
+                if abstract:
+                    params["mlstm_groups"] = jax.tree.map(
+                        lambda l: jax.ShapeDtypeStruct((g, rem) + tuple(l.shape), l.dtype),
+                        tmpl_m,
+                    )
+                else:
+                    def rebuild_group(k):
+                        return _stack_template(tmpl_m, rem, False, k,
+                                               lambda kk: self._mlstm_block_init(kk)[0])
+                    params["mlstm_groups"] = _stack_group(ks[3], g, rebuild_group)
+                specs["mlstm_groups"] = jax.tree.map(
+                    lambda ax: ("layers", "layers2") + ax, s_m,
+                    is_leaf=lambda x: isinstance(x, tuple),
+                )
+                t_s, s_s = self._slstm_block_init(ks[4])
+                tmpl_s = jax.tree.map(_sds, t_s)
+                if abstract:
+                    params["slstm_blocks"] = _stack_template(tmpl_s, g, True)
+                else:
+                    params["slstm_blocks"] = _stack_template(
+                        tmpl_s, g, False, ks[4], lambda kk: self._slstm_block_init(kk)[0]
+                    )
+                specs["slstm_blocks"] = jax.tree.map(
+                    lambda ax: ("layers",) + ax, s_s,
+                    is_leaf=lambda x: isinstance(x, tuple),
+                )
+                return params, specs
+
+            if cfg.ssm:  # zamba2 hybrid
+                g, per = self._hybrid_groups()
+                t_m, s_m = self._mamba_block_init(ks[3])
+                tmpl_m = jax.tree.map(_sds, t_m)
+                grouped = jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct((g, per) + tuple(l.shape), l.dtype), tmpl_m
+                )
+                if abstract:
+                    params["mamba_groups"] = grouped
+                else:
+                    def rebuild_group(k):
+                        return _stack_template(tmpl_m, per, False, k,
+                                               lambda kk: self._mamba_block_init(kk)[0])
+                    params["mamba_groups"] = _stack_group(ks[3], g, rebuild_group)
+                specs["mamba_groups"] = jax.tree.map(
+                    lambda ax: ("layers", "layers2") + ax, s_m,
+                    is_leaf=lambda x: isinstance(x, tuple),
+                )
+                shared, shared_specs = self._dense_block_init(ks[4])
+                if abstract:
+                    shared = jax.tree.map(_sds, shared)
+                params["shared_attn"] = shared  # ONE weight set, reused per group
+                specs["shared_attn"] = shared_specs
+                return params, specs
+
+            if cfg.moe:
+                nd = cfg.first_dense_layers
+                dense_blocks = []
+                dense_specs = None
+                for i in range(nd):
+                    dp, dsp = self._dense_block_init(jax.random.fold_in(ks[3], i))
+                    if abstract:
+                        dp = jax.tree.map(_sds, dp)
+                    dense_blocks.append(dp)
+                    dense_specs = dsp
+                params["dense_blocks"] = dense_blocks
+                specs["dense_blocks"] = [dense_specs] * nd
+                n_moe = cfg.n_layers - nd
+                t, s = self._moe_block_init(ks[4])
+                tmpl = jax.tree.map(_sds, t)
+                if abstract:
+                    params["blocks"] = _stack_template(tmpl, n_moe, True)
+                else:
+                    params["blocks"] = _stack_template(
+                        tmpl, n_moe, False, ks[4], lambda kk: self._moe_block_init(kk)[0]
+                    )
+                specs["blocks"] = jax.tree.map(
+                    lambda ax: ("layers",) + ax, s, is_leaf=lambda x: isinstance(x, tuple)
+                )
+                return params, specs
+
+            # dense / vlm / audio
+            t, s = self._dense_block_init(ks[3])
+            tmpl = jax.tree.map(_sds, t)
+            if abstract:
+                params["blocks"] = _stack_template(tmpl, cfg.n_layers, True)
+            else:
+                params["blocks"] = _stack_template(
+                    tmpl, cfg.n_layers, False, ks[3], lambda kk: self._dense_block_init(kk)[0]
+                )
+            specs["blocks"] = jax.tree.map(
+                lambda ax: ("layers",) + ax, s, is_leaf=lambda x: isinstance(x, tuple)
+            )
+            return params, specs
+
+    def _xlstm_groups(self):
+        cfg = self.cfg
+        if not cfg.slstm_every:
+            return 1, cfg.n_layers  # one group, all mLSTM, no sLSTM
+        assert cfg.n_layers % cfg.slstm_every == 0
+        g = cfg.n_layers // cfg.slstm_every
+        return g, cfg.slstm_every - 1
+
+    def _hybrid_groups(self):
+        cfg = self.cfg
+        assert cfg.n_layers % cfg.attn_every == 0
+        return cfg.n_layers // cfg.attn_every, cfg.attn_every
+
+    def init(self, key) -> Params:
+        return self.init_with_specs(key, abstract=False)[0]
+
+    def abstract_params(self) -> Params:
+        p, _ = self.init_with_specs(jax.random.PRNGKey(0), abstract=True)
+        return jax.tree.map(
+            lambda l: l if isinstance(l, jax.ShapeDtypeStruct) else _sds(l), p
+        )
+
+    def param_specs(self) -> Params:
+        _, s = self.init_with_specs(jax.random.PRNGKey(0), abstract=True)
+        return s
+
+    # ------------------------------------------------------------------
+    # forward (training / prefill / encoder)
+    # ------------------------------------------------------------------
+    def _inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend != "none":
+            x = batch["embeds"].astype(self.dtype) @ params["frontend_proj"]
+        else:
+            x = embed_lookup(params["embed"], batch["tokens"])
+        b, s = x.shape[0], x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.mrope:
+            pos = jnp.broadcast_to(pos[None], (3, b, s))
+        return shd(x, "batch", self._seq_ax, None), pos
+
+    def _dense_block_apply(self, p, x, pos):
+        cfg = self.cfg
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        h = attn.mla_forward(p["attn"], cfg, h, pos) if cfg.mla else attn.gqa_forward(
+            p["attn"], cfg, h, pos, attn_impl=self.attn_impl, unroll=self.unroll,
+            seq_parallel=self.attn_seq_parallel,
+        )
+        x = x + h
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h, cfg.gated_mlp)
+        return shd(x, "batch", self._seq_ax, None)
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        x, pos = self._inputs(params, batch)
+        aux: Dict[str, jnp.ndarray] = {}
+
+        if cfg.xlstm:
+            g, rem = self._xlstm_groups()
+
+            def group(x, gp):
+                mg, sp = gp
+                for i in range(rem):
+                    blk = jax.tree.map(lambda l: l[i], mg)
+                    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+                    x = x + xlstm_mod.mlstm_forward(blk["mlstm"], cfg, h)
+                if cfg.slstm_every:
+                    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+                    x = x + xlstm_mod.slstm_forward(sp["slstm"], cfg, h)
+                return x, None
+
+            x, _ = self._maybe_scan(
+                lambda c, gp: group(c, gp), x,
+                (params["mlstm_groups"], params["slstm_blocks"]),
+            )
+        elif cfg.ssm:
+            g, per = self._hybrid_groups()
+            shared = params["shared_attn"]
+
+            def group(x, mg):
+                for i in range(per):
+                    blk = jax.tree.map(lambda l: l[i], mg)
+                    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+                    x = x + ssm_mod.mamba2_forward(blk["mamba"], cfg, h, unroll=self.unroll)
+                x = self._dense_block_apply(shared, x, pos)
+                return x, None
+
+            x, _ = self._maybe_scan(group, x, params["mamba_groups"])
+        elif cfg.moe:
+            for dp in params["dense_blocks"]:
+                x = self._dense_block_apply(dp, x, pos)
+
+            def block(x, p):
+                h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+                h = attn.mla_forward(p["attn"], cfg, h, pos) if cfg.mla \
+                    else attn.gqa_forward(p["attn"], cfg, h, pos,
+                                          attn_impl=self.attn_impl, unroll=self.unroll,
+                                          seq_parallel=self.attn_seq_parallel)
+                x = x + h
+                h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+                mo, a = moe_mod.moe_apply(p["moe"], cfg, h)
+                x = x + mo
+                return shd(x, "batch", self._seq_ax, None), a["load_balance_loss"]
+
+            x, lbl = self._maybe_scan(block, x, params["blocks"])
+            aux["load_balance_loss"] = jnp.mean(lbl)
+        else:
+            def block(x, p):
+                return self._dense_block_apply(p, x, pos), None
+
+            x, _ = self._maybe_scan(block, x, params["blocks"])
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head
+        return shd(logits, "batch", self._seq_ax, "vocab"), aux
+
+    # ------------------------------------------------------------------
+    # training loss
+    # ------------------------------------------------------------------
+    def loss(self, params: Params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.forward(params, batch)
+        loss = softmax_xent(logits, batch["labels"])
+        metrics = {"xent": loss}
+        if "load_balance_loss" in aux:
+            loss = loss + 0.01 * aux["load_balance_loss"]
+            metrics["load_balance"] = aux["load_balance_loss"]
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # serving: cache init + single-token decode
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False) -> Params:
+        cfg = self.cfg
+
+        def build():
+            if cfg.xlstm:
+                g, rem = self._xlstm_groups()
+                mc = xlstm_mod.mlstm_init_cache(cfg, batch)
+                mg = jax.tree.map(
+                    lambda l: jnp.zeros((g, rem) + l.shape, l.dtype), mc
+                )
+                sc = xlstm_mod.slstm_init_cache(cfg, batch)
+                sg = jax.tree.map(lambda l: jnp.zeros((g,) + l.shape, l.dtype), sc)
+                return {"mlstm": mg, "slstm": sg, "pos": jnp.zeros((), jnp.int32)}
+            if cfg.ssm:
+                g, per = self._hybrid_groups()
+                mc = ssm_mod.mamba2_init_cache(cfg, batch, self.dtype)
+                mg = jax.tree.map(lambda l: jnp.zeros((g, per) + l.shape, l.dtype), mc)
+                ac = attn.gqa_init_cache(cfg, batch, max_len, self.dtype)
+                ag = jax.tree.map(lambda l: jnp.zeros((g,) + l.shape, l.dtype), ac)
+                return {"mamba": mg, "attn": ag, "pos": jnp.zeros((), jnp.int32)}
+            if cfg.mla:
+                lc = attn.mla_init_cache(cfg, batch, max_len, self.dtype)
+            else:
+                lc = attn.gqa_init_cache(cfg, batch, max_len, self.dtype)
+            n_stack = cfg.n_layers - (cfg.first_dense_layers if cfg.moe else 0)
+            stacked = jax.tree.map(lambda l: jnp.zeros((n_stack,) + l.shape, l.dtype), lc)
+            out = {"kv": stacked, "pos": jnp.zeros((), jnp.int32)}
+            if cfg.moe and cfg.first_dense_layers:
+                out["kv_dense"] = [
+                    jax.tree.map(lambda l: l.copy(), lc)
+                    for _ in range(cfg.first_dense_layers)
+                ]
+            return out
+
+        if abstract:
+            return jax.eval_shape(build)
+        return build()
+
+    def decode_step(self, params: Params, cache: Params, tokens: jnp.ndarray):
+        """One serve step: tokens [B, 1] (or embeds [B, 1, D]) -> logits."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        if cfg.frontend != "none":
+            x = tokens.astype(self.dtype) @ params["frontend_proj"]
+        else:
+            x = embed_lookup(params["embed"], tokens)
+        new_cache = dict(cache)
+
+        if cfg.xlstm:
+            g, rem = self._xlstm_groups()
+
+            def group(x, gp):
+                mg, sp, mcache, scache = gp
+                new_mc = []
+                for i in range(rem):
+                    blk = jax.tree.map(lambda l: l[i], mg)
+                    cc = jax.tree.map(lambda l: l[i], mcache)
+                    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+                    dh, cc2 = xlstm_mod.mlstm_decode(blk["mlstm"], cfg, cc, h)
+                    x = x + dh
+                    new_mc.append(cc2)
+                new_mc = jax.tree.map(lambda *ls: jnp.stack(ls), *new_mc)
+                if cfg.slstm_every:
+                    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+                    dh, sc2 = xlstm_mod.slstm_decode(sp["slstm"], cfg, scache, h)
+                    x = x + dh
+                else:
+                    sc2 = scache
+                return x, (new_mc, sc2)
+
+            x, (mg2, sg2) = self._maybe_scan(
+                group, x,
+                (params["mlstm_groups"], params["slstm_blocks"],
+                 cache["mlstm"], cache["slstm"]),
+            )
+            new_cache["mlstm"], new_cache["slstm"] = mg2, sg2
+        elif cfg.ssm:
+            g, per = self._hybrid_groups()
+            shared = params["shared_attn"]
+
+            def group(x, gp):
+                mg, mcache, acache = gp
+                new_mc = []
+                for i in range(per):
+                    blk = jax.tree.map(lambda l: l[i], mg)
+                    cc = jax.tree.map(lambda l: l[i], mcache)
+                    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+                    dh, cc2 = ssm_mod.mamba2_decode(blk["mamba"], cfg, cc, h)
+                    x = x + dh
+                    new_mc.append(cc2)
+                new_mc = jax.tree.map(lambda *ls: jnp.stack(ls), *new_mc)
+                h = rmsnorm(x, shared["ln1"], cfg.norm_eps)
+                dh, ac2 = attn.gqa_decode(shared["attn"], cfg, acache, h, pos,
+                                          batch_parallel=self.decode_batch_parallel)
+                x = x + dh
+                h = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+                x = x + mlp_apply(shared["mlp"], h, cfg.gated_mlp)
+                return x, (new_mc, ac2)
+
+            x, (mg2, ag2) = self._maybe_scan(
+                group, x, (params["mamba_groups"], cache["mamba"], cache["attn"])
+            )
+            new_cache["mamba"], new_cache["attn"] = mg2, ag2
+        else:
+            if cfg.moe and cfg.first_dense_layers:
+                kvd = []
+                for dp, dc in zip(params["dense_blocks"], cache["kv_dense"]):
+                    h = rmsnorm(x, dp["ln1"], cfg.norm_eps)
+                    dh, dc2 = (
+                        attn.mla_decode(dp["attn"], cfg, dc, h, pos,
+                                        batch_parallel=self.decode_batch_parallel)
+                        if cfg.mla
+                        else attn.gqa_decode(dp["attn"], cfg, dc, h, pos,
+                                             batch_parallel=self.decode_batch_parallel)
+                    )
+                    x = x + dh
+                    h = rmsnorm(x, dp["ln2"], cfg.norm_eps)
+                    x = x + mlp_apply(dp["mlp"], h, cfg.gated_mlp)
+                    kvd.append(dc2)
+                new_cache["kv_dense"] = kvd
+
+            def block(x, bp):
+                p, c = bp
+                h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+                dh, c2 = (
+                    attn.mla_decode(p["attn"], cfg, c, h, pos,
+                                    batch_parallel=self.decode_batch_parallel)
+                    if cfg.mla
+                    else attn.gqa_decode(p["attn"], cfg, c, h, pos,
+                                         batch_parallel=self.decode_batch_parallel)
+                )
+                x = x + dh
+                h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+                if cfg.moe:
+                    mo, _ = moe_mod.moe_apply(p["moe"], cfg, h)
+                    x = x + mo
+                else:
+                    x = x + mlp_apply(p["mlp"], h, cfg.gated_mlp)
+                return x, c2
+
+            x, kv2 = self._maybe_scan(block, x, (params["blocks"], cache["kv"]))
+            new_cache["kv"] = kv2
+
+        new_cache["pos"] = pos + 1
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return x @ head, new_cache
+
+
+def _stack_group(key, g: int, rebuild_group):
+    keys = jax.random.split(key, g)
+    groups = [rebuild_group(keys[i]) for i in range(g)]
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *groups)
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False

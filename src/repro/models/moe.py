@@ -1,0 +1,166 @@
+"""Mixture-of-Experts layer routed through the paper's shuffle engine.
+
+Token dispatch is the graph-shuffle problem of paper §III-C3: tokens are
+update tuples keyed by expert id. The layer:
+
+1. routes (softmax top-k),
+2. **sorts token-assignments by expert** (the static shuffle routing),
+3. bins them into block-aligned capacity groups (the dst-partition step —
+   `kernels/moe_dispatch` is the Pallas realization; the jnp path below is
+   its exact oracle and is used under jit/SPMD),
+4. runs the per-expert FFN as dense [E, C, D] batched matmuls (MXU),
+5. combines with the inverse shuffle weighted by router probabilities.
+
+Capacity overflow drops tokens (standard Switch-style), counted in aux.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import _init_normal, shd
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    params = {
+        "router": _init_normal(ks[0], (d, e), s_in, jnp.float32),
+        "wi": _init_normal(ks[1], (e, d, f), s_in, dtype),
+        "wg": _init_normal(ks[2], (e, d, f), s_in, dtype),
+        "wo": _init_normal(ks[3], (e, f, d), s_out, dtype),
+    }
+    specs = {
+        "router": ("embed", None),
+        "wi": ("experts", "expert_dmodel", "expert_ff"),
+        "wg": ("experts", "expert_dmodel", "expert_ff"),
+        "wo": ("experts", "expert_ff", "expert_dmodel"),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        params["shared_wi"] = _init_normal(ks[4], (d, fs), s_in, dtype)
+        params["shared_wg"] = _init_normal(ks[4], (d, fs), s_in, dtype)
+        params["shared_wo"] = _init_normal(ks[4], (fs, d), s_out, dtype)
+        specs["shared_wi"] = ("embed", "mlp")
+        specs["shared_wg"] = ("embed", "mlp")
+        specs["shared_wo"] = ("mlp", "embed")
+    return params, specs
+
+
+def _dispatch_groups(t: int, max_groups: int = 32) -> int:
+    """Largest power-of-two group count <= max_groups dividing t.
+
+    Groups correspond to data-parallel shards: each group sorts/bins its
+    own tokens (per-shard capacity), which keeps every dispatch tensor
+    batched on a sharded leading axis under GSPMD — the SPMD analogue of
+    per-device shuffle routing."""
+    g = 1
+    while g * 2 <= max_groups and t % (g * 2) == 0 and t // (g * 2) >= 1:
+        g *= 2
+    return g
+
+
+def moe_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # [B, S, D]
+    capacity_factor: float = 0.0,  # 0 -> cfg.moe_capacity_factor
+    n_groups: int = 0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    capacity_factor = capacity_factor or cfg.moe_capacity_factor
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = n_groups or _dispatch_groups(t)
+    tg = t // g
+    xt = shd(x.reshape(g, tg, d), "batch", None, None)
+
+    # 1. route
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # [G,Tg,k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # 2. shuffle routing per group: sort the Tg*k assignments by expert id
+    flat_e = top_e.reshape(g, tg * k)
+    flat_w = top_p.reshape(g, tg * k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None], (g, tg * k)
+    )
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+
+    # 3. per-group capacity binning (the dst-partition step)
+    cap = int(max(1, math.ceil(capacity_factor * tg * k / e)))
+    first = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(se)
+    pos_in_e = jnp.arange(tg * k)[None] - first
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)  # drop -> overflow bin
+    # inverse shuffle map (token id filling each bin slot), then ONE gather
+    # into [G, E*C, D] bins — the wide (D-dim) token tensor is never
+    # materialized in assignment order (oracle of kernels/moe_dispatch)
+    tok_for_slot = jax.vmap(
+        lambda sl, tk: jnp.full((e * cap + 1,), tg, jnp.int32).at[sl].set(tk)
+    )(slot, stok)[:, :-1]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    binned = jnp.take_along_axis(xt_pad, tok_for_slot[..., None], axis=1)
+    binned = binned.reshape(g, e, cap, d)
+    from .layers import _SHARDING_RULES
+
+    token_ep = bool(_SHARDING_RULES and _SHARDING_RULES.get("expert_ff"))
+    if token_ep:
+        # tokens-move expert parallelism (perf loop): gather the (small)
+        # token bins across the data axis; expert weights stay resident
+        # with their ff dim sharded — the FFN computes on weight shards
+        # and the combine reduce-scatters back to token owners.
+        binned = shd(binned, None, "experts", None, None)
+    else:
+        binned = shd(binned, "batch", "experts", None, None)
+
+    # 4. per-expert FFN (dense batched matmul on the MXU)
+    h = jnp.einsum("gecd,edf->gecf", binned, p["wi"])
+    gg = jnp.einsum("gecd,edf->gecf", binned, p["wg"])
+    h = jax.nn.silu(gg) * h
+    if token_ep:
+        h = shd(h, None, "experts", None, "expert_ff")
+    else:
+        h = shd(h, "batch", "experts", None, None)
+    y = jnp.einsum("gecf,efd->gecd", h, p["wo"])  # [G,E,C,D]
+
+    # 5. inverse shuffle + weighted combine (in x.dtype: at most top_k
+    # accumulands per token, so low-precision accumulation is benign and
+    # halves the combine traffic vs f32)
+    flat_y = y.reshape(g, e * cap, d)
+    safe_slot = jnp.minimum(slot, e * cap - 1)
+    gathered = jnp.take_along_axis(flat_y, safe_slot[..., None], axis=1)
+    gathered = gathered * sw[..., None].astype(x.dtype)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    contrib = jax.vmap(
+        lambda tok, v: jnp.zeros((tg, d), x.dtype).at[tok].add(v)
+    )(stok, gathered)
+    out = shd(contrib, "batch", None, None)
+
+    # shared experts (always-on)
+    if cfg.n_shared_experts:
+        hs = jax.nn.silu(xt @ p["shared_wg"]) * (xt @ p["shared_wi"])
+        out = out + (hs @ p["shared_wo"]).astype(out.dtype)
+
+    # aux metrics: load balance + drop fraction
+    me = jnp.mean(probs, axis=(0, 1))  # [E] router prob mass
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )  # top-1 assignment fraction
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce),
+        "drop_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(b, s, d), aux

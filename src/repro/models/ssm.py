@@ -1,0 +1,187 @@
+"""Mamba2 (SSD) block — chunked matrix formulation (TPU-native).
+
+The selective-state-space recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t ⊗ x_t ;  y_t = C_t · h_t + D x_t
+is evaluated in the **chunked SSD form**: the sequence is split into chunks
+of length ``Lc``; intra-chunk contributions become attention-like matmuls
+(MXU work), inter-chunk state is carried by a short ``lax.scan`` over
+chunks. This replaces the GPU kernel's warp-level scan with block matmuls —
+the TPU adaptation of the recurrence (see DESIGN.md §2).
+
+Decode keeps O(1) state: (conv ring buffer, SSM state [B, H, P, N]).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import _init_normal, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.d_model * cfg.ssm_expand
+    n_heads = cfg.ssm_heads or max(1, d_in // 128)
+    headdim = d_in // n_heads
+    return d_in, n_heads, headdim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_in, nh, hp, ns = _dims(cfg)
+    conv_dim = d_in + 2 * ns
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        # split projections keep every sharded dim cleanly divisible
+        "w_z": _init_normal(ks[0], (d, d_in), s, dtype),
+        "w_xbc": _init_normal(ks[3], (d, conv_dim), s, dtype),
+        "w_dt": _init_normal(ks[1], (d, nh), s, jnp.float32),
+        "conv_w": _init_normal(ks[1], (cfg.ssm_conv, conv_dim), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "w_out": _init_normal(ks[2], (d_in, d), 1.0 / math.sqrt(d_in), dtype),
+        "out_norm": jnp.ones((d_in,), dtype),
+    }
+    specs = {
+        "w_z": ("embed", "mlp"),
+        "w_xbc": ("embed", "mlp"),
+        "w_dt": ("embed", None),
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "dt_bias": (None,),
+        "w_out": ("mlp", "embed"),
+        "out_norm": ("mlp",),
+    }
+    return params, specs
+
+
+def _split_proj(cfg, p, x):
+    return x @ p["w_z"], x @ p["w_xbc"], x @ p["w_dt"]
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq: xbc [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray, chunk: int = 256, unroll: bool = False
+) -> jnp.ndarray:
+    b, s, d = x.shape
+    d_in, nh, hp, ns = _dims(cfg)
+    z, xbc, dt = _split_proj(cfg, p, x)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in].reshape(b, s, nh, hp)
+    bmat = xbc[..., d_in : d_in + ns]  # [B,S,N]
+    cmat = xbc[..., d_in + ns :]  # [B,S,N]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H] negative decay rates
+
+    lc = min(chunk, s)
+    while s % lc:
+        lc //= 2
+    nc = s // lc
+    # reshape into chunks
+    xs_c = xs.reshape(b, nc, lc, nh, hp)
+    b_c = bmat.reshape(b, nc, lc, ns)
+    c_c = cmat.reshape(b, nc, lc, ns)
+    dt_c = dt.reshape(b, nc, lc, nh)
+
+    da = dt_c * a  # [B,nc,lc,H] log-decay per step
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+    total = cum[:, :, -1, :]  # [B,nc,H]
+
+    # intra-chunk (attention-like): L[i,j] = exp(cum_i - cum_j) for j<=i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,lc,lc,H]
+    causal = jnp.tril(jnp.ones((lc, lc), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", c_c.astype(jnp.float32), b_c.astype(jnp.float32))
+    w_ij = scores[..., None] * decay * dt_c[:, :, None, :, :]  # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xs_c.astype(jnp.float32))
+
+    # inter-chunk state carry (scan over chunks)
+    # state contribution of chunk: sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # [B,nc,lc,H]
+    bx = jnp.einsum(
+        "bcjn,bcjhp->bcnhp",
+        b_c.astype(jnp.float32),
+        xs_c.astype(jnp.float32) * (dt_c * decay_to_end)[..., None],
+    )  # [B,nc,N,H,P]
+
+    def step(state, inputs):
+        bx_c, tot_c = inputs  # [B,N,H,P], [B,H]
+        new = state * jnp.exp(tot_c)[:, None, :, None] + bx_c
+        return new, state  # emit the INCOMING state for this chunk
+
+    init = jnp.zeros((b, ns, nh, hp), jnp.float32)
+    scan_in = (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(total, 1, 0))
+    if unroll:
+        st, outs = init, []
+        for c in range(nc):
+            st, emitted = step(st, jax.tree.map(lambda l: l[c], scan_in))
+            outs.append(emitted)
+        states_in = jnp.stack(outs)
+    else:
+        _, states_in = jax.lax.scan(step, init, scan_in)  # [nc,B,N,H,P]
+    states_in = jnp.moveaxis(states_in, 0, 1)  # [B,nc,N,H,P]
+    y_inter = jnp.einsum(
+        "bcin,bcnhp->bcihp", c_c.astype(jnp.float32), states_in
+    ) * jnp.exp(cum)[..., None]  # decay from chunk start to i
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hp)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+# -- O(1) decode -------------------------------------------------------------
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    d_in, nh, hp, ns = _dims(cfg)
+    conv_dim = d_in + 2 * ns
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, ns, nh, hp), jnp.float32),
+    }
+
+
+def mamba2_decode(
+    p: Params, cfg: ArchConfig, cache: Params, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, Params]:
+    b, s, d = x.shape  # s == 1
+    d_in, nh, hp, ns = _dims(cfg)
+    z, xbc, dt = _split_proj(cfg, p, x)
+    # conv ring: shift in the new frame
+    frames = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", frames, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xs = xbc1[..., :d_in].reshape(b, nh, hp)
+    bvec = xbc1[:, 0, d_in : d_in + ns]
+    cvec = xbc1[:, 0, d_in + ns :]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt1 * a)  # [B,H]
+    upd = jnp.einsum(
+        "bn,bhp->bnhp", bvec.astype(jnp.float32), xs.astype(jnp.float32) * dt1[..., None]
+    )
+    state = cache["state"] * decay[:, None, :, None] + upd
+    y = jnp.einsum("bn,bnhp->bhp", cvec.astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"conv": frames[:, 1:], "state": state}

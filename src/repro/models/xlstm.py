@@ -1,0 +1,197 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel train form) + sLSTM.
+
+mLSTM trains in its parallel (attention-like) form with stabilized
+exponential gating; decode is the O(1) recurrent form with per-head matrix
+memory C [Dh, Dh] and normalizer n [Dh]. sLSTM is a true scalar recurrence
+(lax.scan over time) placed every ``slstm_every``-th layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import _init_normal, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.d_model * cfg.ssm_expand
+    nh = cfg.n_heads
+    hd = d_in // nh
+    return d_in, nh, hd
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_in, nh, hd = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "wq": _init_normal(ks[0], (d, d_in), s, dtype),
+        "wk": _init_normal(ks[1], (d, d_in), s, dtype),
+        "wv": _init_normal(ks[2], (d, d_in), s, dtype),
+        "wif": _init_normal(ks[3], (d, 2 * nh), s, jnp.float32),  # i,f gate logits
+        "wo_gate": _init_normal(ks[4], (d, d_in), s, dtype),
+        "w_out": _init_normal(ks[5], (d_in, d), 1.0 / math.sqrt(d_in), dtype),
+        "out_norm": jnp.ones((d_in,), dtype),
+    }
+    specs = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "wif": ("embed", None),
+        "wo_gate": ("embed", "heads"),
+        "w_out": ("heads", "embed"),
+        "out_norm": ("heads",),
+    }
+    return params, specs
+
+
+def mlstm_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Parallel (training) form with log-space stabilization."""
+    b, s, d = x.shape
+    d_in, nh, hd = _dims(cfg)
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    k = (x @ p["wk"]).reshape(b, s, nh, hd)
+    v = (x @ p["wv"]).reshape(b, s, nh, hd)
+    gates = (x.astype(jnp.float32) @ p["wif"]).reshape(b, s, nh, 2)
+    log_i = -jax.nn.softplus(-gates[..., 0])  # log sigmoid-ish input gate
+    log_f = -jax.nn.softplus(-gates[..., 1])  # log forget gate in (-inf, 0)
+    logcum_f = jnp.cumsum(log_f, axis=1)  # [B,S,H]
+    # D_ij = exp(logcum_f_i - logcum_f_j + log_i_j) for j <= i
+    dmat = logcum_f[:, :, None, :] - logcum_f[:, None, :, :] + log_i[:, None, :, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # [B,S,1,H] row stabilizer
+    dstab = jnp.exp(dmat - m)
+    scores = jnp.einsum(
+        "bihd,bjhd->bijh", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(hd)
+    w = scores * dstab  # [B,S,S,H]
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)), jnp.exp(-m))
+    w = w / norm
+    h = jnp.einsum("bijh,bjhd->bihd", w, v.astype(jnp.float32)).astype(x.dtype)
+    h = h.reshape(b, s, d_in)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(x @ p["wo_gate"])
+    return h @ p["w_out"]
+
+
+def mlstm_init_cache(cfg: ArchConfig, batch: int):
+    d_in, nh, hd = _dims(cfg)
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, cfg: ArchConfig, cache: Params, x: jnp.ndarray):
+    b, s, d = x.shape  # s == 1
+    d_in, nh, hd = _dims(cfg)
+    q = (x @ p["wq"]).reshape(b, nh, hd).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(b, nh, hd).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(b, nh, hd).astype(jnp.float32)
+    gates = (x.astype(jnp.float32) @ p["wif"]).reshape(b, nh, 2)
+    log_i = -jax.nn.softplus(-gates[..., 0])
+    log_f = -jax.nn.softplus(-gates[..., 1])
+    m_new = jnp.maximum(log_f + cache["m"], log_i)  # [B,H]
+    f_sc = jnp.exp(log_f + cache["m"] - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+    c = cache["c"] * f_sc[..., None] + i_sc[..., None] * (k[..., :, None] * v[..., None, :])
+    n = cache["n"] * f_sc + i_sc * k
+    qs = q / math.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", qs, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, d_in).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(x @ p["wo_gate"])
+    return h @ p["w_out"], {"c": c, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM (scalar memory, true recurrence)
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_in, nh, hd = _dims(cfg)
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        # input projections for (z, i, f, o) gates
+        "w_x": _init_normal(ks[0], (d, 4 * d_in), s, dtype),
+        # block-diagonal recurrent weights per head: [H, hd, 4*hd]
+        "w_h": _init_normal(ks[1], (nh, hd, 4 * hd), 1.0 / math.sqrt(hd), jnp.float32),
+        "w_out": _init_normal(ks[2], (d_in, d), 1.0 / math.sqrt(d_in), dtype),
+        "out_norm": jnp.ones((d_in,), dtype),
+    }
+    specs = {
+        "w_x": ("embed", "heads"),
+        "w_h": (None, "head_dim", "heads"),
+        "w_out": ("heads", "embed"),
+        "out_norm": ("heads",),
+    }
+    return params, specs
+
+
+def slstm_init_cache(cfg: ArchConfig, batch: int):
+    d_in, nh, hd = _dims(cfg)
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p, cfg, carry, xt):
+    """One sLSTM step. xt: [B, 4*d_in] pre-projected input contributions."""
+    d_in, nh, hd = _dims(cfg)
+    c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+    rec = jnp.einsum("bhd,hde->bhe", h, p["w_h"]).reshape(-1, nh, 4, hd)
+    pre = xt.astype(jnp.float32).reshape(-1, nh, 4, hd) + rec.reshape(-1, nh, 4, hd)
+    z_t = jnp.tanh(pre[:, :, 0])
+    i_log = pre[:, :, 1]
+    f_log = -jax.nn.softplus(-pre[:, :, 2])  # log sigmoid
+    o_t = jax.nn.sigmoid(pre[:, :, 3])
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_sc = jnp.exp(i_log - m_new)
+    f_sc = jnp.exp(f_log + m - m_new)
+    c_new = f_sc * c + i_sc * z_t
+    n_new = jnp.maximum(f_sc * n + i_sc, jnp.exp(-m_new))
+    h_new = o_t * c_new / n_new
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, d = x.shape
+    d_in, nh, hd = _dims(cfg)
+    xin = x @ p["w_x"]  # [B,S,4*d_in]
+
+    def step(carry, xt):
+        new = _slstm_cell(p, cfg, carry, xt)
+        return new, new["h"]
+
+    init = slstm_init_cache(cfg, b)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(xin, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d_in).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    return h @ p["w_out"]
+
+
+def slstm_decode(p: Params, cfg: ArchConfig, cache: Params, x: jnp.ndarray):
+    b = x.shape[0]
+    d_in, nh, hd = _dims(cfg)
+    xin = (x @ p["w_x"])[:, 0]
+    new = _slstm_cell(p, cfg, cache, xin)
+    h = new["h"].reshape(b, 1, d_in).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    return h @ p["w_out"], new

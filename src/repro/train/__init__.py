@@ -1,0 +1,4 @@
+from .optimizer import OptConfig, init_state, apply_updates, lr_schedule, global_norm
+from .train_step import make_train_step, make_eval_step
+
+__all__ = ["OptConfig", "init_state", "apply_updates", "lr_schedule", "global_norm", "make_train_step", "make_eval_step"]

@@ -1,0 +1,70 @@
+"""Train step builder: remat + microbatch accumulation + optional
+int8-compressed data-parallel gradient reduction.
+
+``make_train_step(model, opt_cfg, n_microbatches)`` returns a pure
+function (params, opt_state, batch) -> (params, opt_state, metrics) that
+jits/pjits cleanly; the global batch's leading dim is split into
+microbatches accumulated by a ``lax.scan`` (activation memory /
+n_microbatches, the standard large-model configuration).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from . import optimizer as opt_mod
+from .optimizer import OptConfig
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: OptConfig,
+    n_microbatches: int = 1,
+    remat: bool = True,  # layer-level remat: construct the Model with remat=True
+    grad_transform: Optional[Callable] = None,  # e.g. compressed psum
+):
+    model.remat = model.remat or remat
+    loss_fn = lambda p, mb: model.loss(p, mb)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches > 1:
+            def micro(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+                return acc, metrics
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((n_microbatches, b // n_microbatches) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            acc_dt = jnp.dtype(opt_cfg.acc_dtype)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, metricses = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            metrics = jax.tree.map(jnp.mean, metricses)
+            loss = metrics["loss"]
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = opt_mod.global_norm(grads)
+        new_params, new_state = opt_mod.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics["lr"] = opt_mod.lr_schedule(opt_cfg, new_state["step"])
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,37 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run a snippet in a fresh interpreter with N host devices.
+
+    Multi-device tests need the device count set before jax initializes,
+    which the main pytest process has already done — hence subprocesses.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={out.returncode})\nstdout:\n{out.stdout}\nstderr:\n{out.stderr[-4000:]}"
+        )
+    return out.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

@@ -1,0 +1,151 @@
+"""End-to-end algorithm tests vs networkx / numpy oracles, across every
+back-end optimization configuration (paper Fig. 8 / Fig. 9 axes)."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import CompileOptions
+from repro.graph import generators
+from repro.algorithms import (
+    run_bfs,
+    run_bfs_hybrid,
+    run_cgaw,
+    run_kcore,
+    run_pagerank,
+    run_ppr,
+    run_sssp,
+    run_wcc,
+)
+
+OPTION_SETS = {
+    "baseline": CompileOptions.baseline(),
+    "burst": CompileOptions.with_only("burst"),
+    "cache": CompileOptions.with_only("cache"),
+    "shuffle": CompileOptions.with_only("shuffle"),
+    "full": CompileOptions.full(),
+    "pallas": CompileOptions.full(pallas=True),
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.power_law(400, 2600, seed=7)
+
+
+@pytest.fixture(scope="module")
+def wgraph():
+    return generators.power_law(400, 2600, seed=7, weighted=True)
+
+
+@pytest.fixture(scope="module")
+def nx_graph(graph):
+    G = nx.DiGraph()
+    G.add_nodes_from(range(graph.n_vertices))
+    G.add_edges_from(zip(graph.src.tolist(), graph.dst.tolist()))
+    return G
+
+
+@pytest.mark.parametrize("opts", list(OPTION_SETS), ids=list(OPTION_SETS))
+def test_bfs_vs_networkx(graph, nx_graph, opts):
+    level, _ = run_bfs(graph, root=0, options=OPTION_SETS[opts])
+    dist = nx.single_source_shortest_path_length(nx_graph, 0)
+    want = np.full(graph.n_vertices, -1)
+    for v, d in dist.items():
+        want[v] = d + 1
+    np.testing.assert_array_equal(level, want)
+
+
+def test_bfs_hybrid_matches_ecp(graph):
+    l1, _ = run_bfs(graph, 0, CompileOptions.full())
+    l2, res = run_bfs_hybrid(graph, 0, CompileOptions.full())
+    np.testing.assert_array_equal(l1, l2)
+    assert res.stats.host_iterations > 0
+
+
+def test_bfs_frontier_compaction_traverses_fewer_edges(graph):
+    _, res_base = run_bfs(graph, 0, CompileOptions.baseline())
+    _, res_full = run_bfs(graph, 0, CompileOptions.full())
+    assert res_full.stats.edges_traversed < res_base.stats.edges_traversed
+    assert res_full.stats.compacted_launches > 0
+
+
+@pytest.mark.parametrize("opts", ["baseline", "full", "pallas"])
+def test_pagerank_vs_power_iteration(graph, opts):
+    rank, _ = run_pagerank(graph, iters=30, options=OPTION_SETS[opts])
+    v = graph.n_vertices
+    deg = graph.out_degree.astype(np.float64)
+    r = np.full(v, 1.0 / v)
+    for _ in range(30):
+        contrib = np.zeros(v)
+        ok = deg[graph.src] > 0
+        np.add.at(contrib, graph.dst, np.where(ok, r[graph.src] / np.maximum(deg[graph.src], 1), 0.0))
+        r = 0.15 / v + 0.85 * contrib
+    np.testing.assert_allclose(rank, r, rtol=3e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("opts", ["baseline", "shuffle", "full"])
+def test_sssp_vs_dijkstra(wgraph, opts):
+    sp, _ = run_sssp(wgraph, root=0, options=OPTION_SETS[opts])
+    G = nx.DiGraph()
+    G.add_nodes_from(range(wgraph.n_vertices))
+    for s, d, w in zip(wgraph.src.tolist(), wgraph.dst.tolist(), wgraph.weights.tolist()):
+        if not G.has_edge(s, d) or G[s][d]["weight"] > w:
+            G.add_edge(s, d, weight=w)
+    dist = nx.single_source_dijkstra_path_length(G, 0)
+    INF = 1073741823
+    want = np.full(wgraph.n_vertices, INF, np.int64)
+    for vv, dd in dist.items():
+        want[vv] = int(dd)
+    np.testing.assert_array_equal(sp, want)
+
+
+def test_ppr_properties(graph):
+    ppr, res = run_ppr(graph, source=0, options=CompileOptions.full())
+    assert ppr.min() >= 0
+    assert 0 < ppr.sum() <= 1.0 + 1e-3
+    assert ppr[0] >= ppr.mean()  # personalization mass concentrates at source
+    assert res.stats.host_iterations < 100  # converged before the cap
+
+
+def test_cgaw_softmax_normalization(wgraph):
+    w, _ = run_cgaw(wgraph, options=CompileOptions.full())
+    sums = np.zeros(wgraph.n_vertices)
+    np.add.at(sums, wgraph.dst, w)
+    has_in = np.bincount(wgraph.dst, minlength=wgraph.n_vertices) > 0
+    np.testing.assert_allclose(sums[has_in], 1.0, rtol=1e-4)
+    assert (w > 0).all()
+
+
+def test_cgaw_option_equivalence(wgraph):
+    w0, _ = run_cgaw(wgraph, options=CompileOptions.baseline())
+    w1, _ = run_cgaw(wgraph, options=CompileOptions.full())
+    np.testing.assert_allclose(w0, w1, rtol=1e-4)
+
+
+def test_wcc_vs_networkx(graph, nx_graph):
+    comp, _ = run_wcc(graph, options=CompileOptions.full())
+    for cc in nx.weakly_connected_components(nx_graph):
+        ids = comp[list(cc)]
+        assert len(set(ids.tolist())) == 1
+    n_ours = len(set(comp.tolist()))
+    assert n_ours == nx.number_weakly_connected_components(nx_graph)
+
+
+def test_kcore_invariant(graph):
+    alive, _ = run_kcore(graph, k=3, options=CompileOptions.full())
+    # every surviving vertex has >= k surviving (in+out) neighbors
+    keep = alive.astype(bool)
+    deg = np.zeros(graph.n_vertices, np.int64)
+    both = keep[graph.src] & keep[graph.dst]
+    np.add.at(deg, graph.src[both], 1)
+    np.add.at(deg, graph.dst[both], 1)
+    assert (deg[keep] >= 3).all()
+
+
+def test_bfs_on_table_ii_dataset():
+    from repro.graph.datasets import make_dataset
+
+    g = make_dataset("R19", scale=0.002, seed=1)
+    level, res = run_bfs(g, root=0, options=CompileOptions.full())
+    assert (level >= -1).all()
+    assert res.stats.host_iterations >= 1

@@ -1,0 +1,83 @@
+"""Front-end tests: lexer, parser, FIR grammar (paper §III-B1)."""
+import pytest
+
+from repro.core import parse
+from repro.core.lexer import LexError, tokenize
+from repro.core.parser import ParseError
+from repro.core import fir
+from repro.algorithms import sources
+
+
+def test_tokenize_basics():
+    toks = tokenize("const level: int = 1; % comment\nfunc f(v: Vertex) end")
+    kinds = [t.kind for t in toks]
+    assert "kw" in kinds and "ident" in kinds and kinds[-1] == "eof"
+    texts = [t.text for t in toks]
+    assert "%" not in texts  # comments stripped
+    assert "level" in texts
+
+
+def test_tokenize_reduce_ops():
+    toks = tokenize("tuple[dst] min= level + 1; x max= 2; y += 3;")
+    ops = [t.text for t in toks if t.kind == "op"]
+    assert "min=" in ops and "max=" in ops and "+=" in ops
+
+
+def test_tokenize_min_as_call_not_reduce():
+    toks = tokenize("x = min(a, b);")
+    assert any(t.kind == "ident" and t.text == "min" for t in toks)
+
+
+def test_lex_errors():
+    with pytest.raises(LexError):
+        tokenize('x = "unclosed')
+    with pytest.raises(LexError):
+        tokenize("x = $bad;")
+
+
+@pytest.mark.parametrize(
+    "src_name", ["BFS_ECP", "BFS_HYBRID", "PAGERANK", "SSSP", "PPR", "CGAW", "WCC", "KCORE"]
+)
+def test_parse_all_algorithms(src_name):
+    prog = parse(getattr(sources, src_name))
+    assert isinstance(prog, fir.Program)
+    assert prog.func("main") is not None
+    assert len(prog.elements) == 2
+
+
+def test_parse_structure_bfs():
+    prog = parse(sources.BFS_ECP)
+    et = prog.func("EdgeTraversal")
+    assert [p.name for p in et.params] == ["src", "dst"]
+    assert isinstance(et.body[0], fir.If)
+    assert isinstance(et.body[0].then_body[0], fir.ReduceAssign)
+    assert et.body[0].then_body[0].op == "min"
+    main = prog.func("main")
+    whiles = [s for s in main.body if isinstance(s, fir.While)]
+    assert len(whiles) == 1
+
+
+def test_parse_weighted_edgeset():
+    prog = parse(sources.SSSP)
+    edges = [c for c in prog.consts if isinstance(c.type, fir.EdgesetType)][0]
+    assert edges.type.weighted and edges.type.weight == "int"
+
+
+def test_parse_errors():
+    with pytest.raises(ParseError):
+        parse("const x int = 1;")  # missing ':'
+    with pytest.raises(ParseError):
+        parse("func f(v: Vertex) x = ; end")
+    with pytest.raises(ParseError):
+        parse("element Vertex")  # missing end
+
+
+def test_fir_dump_reparses():
+    """dump() output is itself valid Graphitron for every algorithm
+    (round-trip: parse -> dump -> parse is structurally stable)."""
+    for name in ("BFS_ECP", "PAGERANK", "SSSP", "PPR", "CGAW", "WCC", "KCORE"):
+        prog = parse(getattr(sources, name))
+        text = fir.dump(prog)
+        prog2 = parse(text)
+        assert len(prog2.funcs) == len(prog.funcs)
+        assert fir.dump(prog2) == text  # fixpoint

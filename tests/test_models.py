@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency +
+published-size checks for the FULL configs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import Model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    if cfg.frontend != "none":
+        return {
+            "embeds": jax.random.normal(KEY, (b, s, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced same-family config: one forward + loss on CPU, finite, and
+    output shapes are correct."""
+    cfg = smoke_config(arch)
+    m = Model(cfg, dtype=jnp.float32)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    logits, _ = jax.jit(m.forward)(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaNs in logits"
+    loss, metrics = jax.jit(m.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0  # init ~ uniform
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if get_config(a).has_decoder])
+def test_decode_matches_forward(arch):
+    cfg = smoke_config(arch)
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)  # no drops
+    m = Model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(1))
+    b, s = 2, 16
+    if cfg.frontend != "none":
+        inp = jax.random.normal(KEY, (b, s, cfg.d_model), jnp.float32)
+        batch = {"embeds": inp}
+        step_in = lambda t: inp[:, t : t + 1]
+    else:
+        toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+        batch = {"tokens": toks}
+        step_in = lambda t: toks[:, t : t + 1]
+    full, _ = jax.jit(m.forward)(params, batch)
+    cache = m.init_cache(b, s)
+    dec = jax.jit(m.decode_step)
+    for t in range(s):
+        lg, cache = dec(params, cache, step_in(t))
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, t])))
+        scale = float(jnp.max(jnp.abs(full[:, t])))
+        assert err < 2e-3 * max(scale, 1.0), f"{arch} t={t}: {err}"
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "zamba2-2.7b"])
+def test_ring_buffer_swa_decode(arch):
+    """Decoding past the sliding window: cache stays O(window)."""
+    cfg = smoke_config(arch)
+    m = Model(cfg, dtype=jnp.float32)
+    params = m.init(jax.random.PRNGKey(2))
+    b, s = 1, 48  # window is 32
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    full, _ = jax.jit(m.forward)(params, {"tokens": toks})
+    cache = m.init_cache(b, s)
+    kv = cache.get("attn", cache.get("kv"))
+    assert kv["k"].shape[-3] == cfg.sliding_window  # ring, not full length
+    dec = jax.jit(m.decode_step)
+    for t in range(s):
+        lg, cache = dec(params, cache, toks[:, t : t + 1])
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, t])))
+        assert err < 5e-3, f"{arch} t={t}: {err}"
+
+
+def test_mla_absorbed_equals_naive_decode():
+    from repro.models import attention as attn
+
+    cfg = smoke_config("deepseek-v2-236b")
+    p, _ = attn.mla_init(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 1, cfg.d_model), jnp.float32)
+    cache = attn.mla_init_cache(cfg, 2, 8, jnp.float32)
+    # place one token at pos 0 first
+    y0, cache = attn.mla_decode(p, cfg, cache, x, jnp.int32(0), absorb=True)
+    y_abs, _ = attn.mla_decode(p, cfg, cache, x, jnp.int32(1), absorb=True)
+    y_naive, _ = attn.mla_decode(p, cfg, cache, x, jnp.int32(1), absorb=False)
+    np.testing.assert_allclose(np.asarray(y_abs), np.asarray(y_naive), rtol=1e-4, atol=1e-5)
+
+
+EXPECTED_PARAMS_B = {
+    "granite-20b": (20.3, 0.5),
+    "h2o-danube-3-4b": (4.0, 0.3),
+    "deepseek-coder-33b": (33.3, 0.7),
+    "qwen3-0.6b": (0.6, 0.1),
+    "deepseek-v2-236b": (236.0, 4.0),
+    "kimi-k2-1t-a32b": (1028.0, 30.0),
+    "hubert-xlarge": (0.96, 0.1),
+    "zamba2-2.7b": (2.4, 0.4),
+    "xlstm-125m": (0.15, 0.05),
+    "qwen2-vl-2b": (1.54, 0.2),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_counts(arch):
+    """Analytic param counts match published model sizes."""
+    cfg = get_config(arch)
+    want, tol = EXPECTED_PARAMS_B[arch]
+    got = cfg.param_count() / 1e9
+    assert abs(got - want) <= tol, f"{arch}: {got:.2f}B vs {want}B"
+
+
+def test_moe_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = cfg.active_param_count() / 1e9
+    assert 28 <= active <= 40  # a32b
+
+
+def test_moe_drop_and_balance_metrics():
+    from repro.models import moe as moe_mod
+
+    cfg = smoke_config("deepseek-v2-236b")
+    p, _ = moe_mod.moe_init(jax.random.PRNGKey(4), cfg, jnp.float32)
+    x = jax.random.normal(KEY, (4, 64, cfg.d_model), jnp.float32)
+    _, aux = moe_mod.moe_apply(p, cfg, x, capacity_factor=0.5)
+    assert float(aux["drop_fraction"]) > 0  # tight capacity must drop
+    _, aux2 = moe_mod.moe_apply(p, cfg, x, capacity_factor=16.0)
+    assert float(aux2["drop_fraction"]) == 0.0
+    assert float(aux2["load_balance_loss"]) > 0
+
+
+def test_param_spec_tree_matches_params():
+    """Logical-axis trees are structurally identical to the param trees."""
+    for arch in ARCH_IDS:
+        m = Model(smoke_config(arch))
+        params = m.abstract_params()
+        specs = m.param_specs()
+        s1 = jax.tree_util.tree_structure(params)
+        s2 = jax.tree_util.tree_structure(
+            jax.tree_util.tree_map(lambda x: 0, specs, is_leaf=lambda x: isinstance(x, tuple))
+        )
+        assert s1 == s2, arch

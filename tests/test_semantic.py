@@ -1,0 +1,118 @@
+"""Middle-end tests: Property Detector, transforms, MIR (paper §III-B2)."""
+import pytest
+
+from repro.core import analyze, parse
+from repro.core import mir
+from repro.core.semantic import SemanticError
+from repro.algorithms import sources
+
+
+def _mod(src):
+    return analyze(parse(src))
+
+
+def test_kernel_classification():
+    m = _mod(sources.BFS_ECP)
+    assert m.kernels["reset"].kind is mir.KernelKind.VERTEX
+    assert m.kernels["EdgeTraversal"].kind is mir.KernelKind.EDGE
+    assert "main" not in m.kernels
+    assert m.host.main is not None
+
+
+def test_property_detector_bfs():
+    m = _mod(sources.BFS_ECP)
+    et = m.kernels["EdgeTraversal"]
+    assert any(r.prop == "old_level" and r.pattern is mir.IndexPattern.SRC for r in et.reads)
+    assert any(
+        w.prop == "tuple" and w.pattern is mir.IndexPattern.DST and w.reduce_op == "min"
+        for w in et.writes
+    )
+    assert "level" in et.scalar_reads
+    vu = m.kernels["VertexUpdate"]
+    assert "activeVertex" in vu.accumulators
+
+
+def test_memory_plan_covers_all_properties():
+    m = _mod(sources.PPR)
+    for p in m.properties:
+        assert p in m.memory.buffers
+    # PPR needs >2 vertex properties — beyond ThunderGP's fixed template
+    assert len(m.memory.buffers) >= 6
+
+
+def test_rmw_normalization():
+    """`P[0] = P[0] + 1` becomes `P[0] += 1` (§III-C2 unroll+reduce)."""
+    m = _mod(sources.BFS_ECP)
+    vu = m.kernels["VertexUpdate"]
+    accum_writes = [w for w in vu.writes if w.prop == "activeVertex"]
+    assert accum_writes and accum_writes[0].reduce_op == "+"
+
+
+def test_raw_decoupling_sssp():
+    """Fig. 5 -> Fig. 6: SP read at src and tuple written at dst are in
+    different buffers already; a kernel writing what it gathers must be
+    snapshot-decoupled."""
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex, int) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const SP: vector{Vertex}(int);
+func sssp(src: Vertex, dst: Vertex, weight: int)
+    SP[dst] min= (SP[src] + weight);
+end
+func main()
+    edges.process(sssp);
+end
+"""
+    m = _mod(src)
+    assert m.kernels["sssp"].snapshot_props == {"SP"}
+
+
+def test_frontier_detection():
+    m = _mod(sources.BFS_ECP)
+    assert m.kernels["EdgeTraversal"].frontier is not None
+    assert m.kernels["EdgeTraversal"].frontier.props == {"old_level"}
+    # VertexApply has no guard
+    assert m.kernels["VertexApply"].frontier is None
+
+
+def test_neighbor_loop_detection():
+    m = _mod(sources.BFS_HYBRID)
+    assert m.kernels["VertexTraversal"].has_neighbor_loop
+
+
+def test_weight_write_detection():
+    m = _mod(sources.CGAW)
+    assert m.kernels["score"].writes_weight
+    assert m.kernels["normalize"].writes_weight
+
+
+def test_degree_property():
+    m = _mod(sources.PAGERANK)
+    assert m.degree_props == {"deg": "out"}
+
+
+def test_describe_lists_modules():
+    m = _mod(sources.SSSP)
+    text = m.describe()
+    assert "kernel relax [edge]" in text
+    assert "buffer SP" in text
+    assert "frontier-check" in text
+
+
+def test_semantic_errors():
+    with pytest.raises(SemanticError):
+        _mod("element Vertex end\nfunc main() end")  # no edgeset
+    with pytest.raises(SemanticError):
+        _mod(
+            "element Vertex end\nelement Edge end\n"
+            "const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);\n"
+            "func f(src: Vertex, dst: Vertex, w: int) end\nfunc main() end"
+        )  # weighted func on unweighted edgeset
+    with pytest.raises(SemanticError):
+        _mod(
+            "element Vertex end\nelement Edge end\n"
+            "const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);\n"
+            "func f(v: Vertex)\n  while (true)\n  end\nend\nfunc main() end"
+        )  # device while loop

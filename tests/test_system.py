@@ -1,0 +1,169 @@
+"""End-to-end system behaviour: user-authored DSL source -> compiled
+accelerator program -> results, plus engine-level invariants the paper's
+system guarantees."""
+import numpy as np
+import pytest
+
+from repro.core import CompileOptions, Engine, compile_source, run_source
+from repro.graph import generators
+
+
+USER_PROGRAM = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const indeg: vector{Vertex}(int);
+const total: vector{Vertex}(int);
+
+func initz(v: Vertex)
+    indeg[v] = 0;
+end
+func count(src: Vertex, dst: Vertex)
+    indeg[dst] += 1;
+    total[0] = total[0] + 1;
+end
+func main()
+    vertices.init(initz);
+    edges.process(count);
+end
+"""
+
+
+def test_user_program_end_to_end():
+    g = generators.uniform_random(50, 400, seed=0)
+    res = run_source(USER_PROGRAM, g, CompileOptions.full(), argv=["prog", "mem"])
+    np.testing.assert_array_equal(res.properties["indeg"], g.in_degree)
+    assert res.properties["total"][0] == g.n_edges  # accumulator reduction
+
+
+def test_engine_reuse_and_stats():
+    g = generators.power_law(100, 600, seed=1)
+    module = compile_source(USER_PROGRAM)
+    eng = Engine(module, g, CompileOptions.full(), argv=["p", "g"])
+    res = eng.run()
+    assert res.stats.kernel_launches == {"initz": 1, "count": 1}
+    assert res.stats.wall_time_s > 0
+
+
+def test_hybrid_direction_switching_actually_switches():
+    """Fig. 2: the engine must launch BOTH VCP and ECP kernels when the
+    frontier crosses the 5% threshold."""
+    from repro.algorithms import sources
+    from repro.graph.datasets import make_dataset
+
+    g = generators.power_law(2000, 30000, seed=2)
+    module = compile_source(sources.BFS_HYBRID)
+    eng = Engine(module, g, CompileOptions.full())
+    eng.host_env["root"] = int(np.argmax(g.out_degree))  # reachable frontier
+    res = eng.run()
+    launches = res.stats.kernel_launches
+    assert launches.get("VertexTraversal", 0) > 0, "VCP never used"
+    assert launches.get("EdgeTraversal", 0) > 0, "ECP never used"
+
+
+def test_multiple_properties_beyond_template_limit():
+    """Table III: arbitrary numbers of graph properties (ThunderGP caps at
+    its template's fixed set)."""
+    src_parts = [
+        "element Vertex end",
+        "element Edge end",
+        "const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);",
+        "const vertices: vertexset{Vertex} = edges.getVertices();",
+    ]
+    n_props = 12
+    for i in range(n_props):
+        src_parts.append(f"const p{i}: vector{{Vertex}}(float);")
+    body = "\n".join(f"    p{i}[v] = {i}.0;" for i in range(n_props))
+    src_parts.append(f"func setall(v: Vertex)\n{body}\nend")
+    src_parts.append("func main()\n    vertices.init(setall);\nend")
+    g = generators.uniform_random(30, 100, seed=3)
+    res = run_source("\n".join(src_parts), g, CompileOptions.full())
+    for i in range(n_props):
+        np.testing.assert_allclose(res.properties[f"p{i}"], float(i))
+
+
+def test_edge_weight_mutation_visible_in_results():
+    """Table III: the accelerator may WRITE edge weights (CGAW's need)."""
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex, float) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+func double_w(src: Vertex, dst: Vertex, weight: float)
+    weight = weight * 2.0;
+end
+func main()
+    edges.process(double_w);
+end
+"""
+    g = generators.uniform_random(20, 80, seed=4, weighted=True)
+    res = run_source(src, g, CompileOptions.full())
+    np.testing.assert_allclose(res.properties["weight"], g.weights * 2.0, rtol=1e-6)
+
+
+def test_vcp_and_ecp_same_result():
+    """The same algorithm expressed vertex-centric and edge-centric
+    produces identical results (programming-model flexibility)."""
+    ecp = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const acc: vector{Vertex}(float);
+const val: vector{Vertex}(float);
+func initv(v: Vertex)
+    val[v] = to_float(original_id(v));
+    acc[v] = 0.0;
+end
+func push(src: Vertex, dst: Vertex)
+    acc[dst] += val[src];
+end
+func main()
+    vertices.init(initv);
+    edges.process(push);
+end
+"""
+    vcp = ecp.replace(
+        """func push(src: Vertex, dst: Vertex)
+    acc[dst] += val[src];
+end""",
+        """func push(v: Vertex)
+    for ngh in v.getNeighbors()
+        acc[ngh] += val[v];
+    end
+end""",
+    ).replace("edges.process(push);", "vertices.process(push);")
+    g = generators.power_law(150, 900, seed=5)
+    r1 = run_source(ecp, g, CompileOptions.full())
+    r2 = run_source(vcp, g, CompileOptions.full())
+    np.testing.assert_allclose(r1.properties["acc"], r2.properties["acc"], rtol=1e-5)
+
+
+def test_pull_direction_in_neighbors():
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const s: vector{Vertex}(float);
+const val: vector{Vertex}(float);
+func initv(v: Vertex)
+    val[v] = 1.0;
+    s[v] = 0.0;
+end
+func pull(v: Vertex)
+    var acc: float = 0.0;
+    for ngh in v.getInNeighbors()
+        acc += val[ngh];
+    end
+    s[v] = acc;
+end
+func main()
+    vertices.init(initv);
+    vertices.process(pull);
+end
+"""
+    g = generators.uniform_random(60, 500, seed=6)
+    res = run_source(src, g, CompileOptions.full())
+    np.testing.assert_allclose(res.properties["s"], g.in_degree.astype(float), rtol=1e-6)
