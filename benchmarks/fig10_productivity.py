@@ -5,7 +5,7 @@ from __future__ import annotations
 import inspect
 import time
 
-from repro.core import CompileOptions, Engine, compile_source
+from repro.core import CompileOptions, clear_program_cache, compile_program
 from repro.graph.datasets import make_dataset
 from repro.algorithms import sources
 from repro.baselines import thundergp
@@ -35,21 +35,20 @@ def main() -> list:
                 f"dsl_loc={_loc(src)};template_engine_loc={tgp_loc};files=1_vs_5+",
             )
         )
-    # code generation time: source -> MIR (the paper reports 0.115 s)
+    # code generation time: source -> Program (the paper reports 0.115 s);
+    # drop the content-hash cache so each compile is a real front-end run
+    clear_program_cache()
     t0 = time.perf_counter()
     for name in ("BFS_ECP", "PAGERANK", "SSSP", "PPR", "CGAW"):
-        compile_source(getattr(sources, name))
+        compile_program(getattr(sources, name))
     gen_s = (time.perf_counter() - t0) / 5
     lines.append(csv_line("fig10.codegen", gen_s * 1e6, f"per_algorithm_s={gen_s:.4f}"))
-    # "synthesis" analogue: lowering + XLA compilation of all kernels
+    # "synthesis" analogue: bind + jit compilation of every kernel launch
+    # path — exactly what the first session.run() pays
     g = make_dataset("AM", scale=0.002, seed=0)
     t0 = time.perf_counter()
-    module = compile_source(sources.BFS_ECP)
-    eng = Engine(module, g, CompileOptions.full())
-    for k in module.kernels:
-        eng._kernel(k)  # lower every kernel
-    eng.host_env["root"] = 0
-    eng.run()  # triggers jit compilation of every launch path
+    session = compile_program(sources.BFS_ECP, CompileOptions.full()).bind(g)
+    session.run(root=0)  # triggers jit compilation of every launch path
     synth_s = time.perf_counter() - t0
     lines.append(csv_line("fig10.synthesis.BFS", synth_s * 1e6, f"end_to_end_s={synth_s:.2f}"))
     return lines

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import CompileOptions, run_source
+from repro.core import CompileOptions, compile_program
 from repro.graph import generators
 from repro.algorithms import sources, run_bfs_hybrid, run_cgaw, run_ppr
 from repro.baselines import thundergp as tg
@@ -26,7 +26,7 @@ def main() -> list:
             return False if isinstance(e, TemplateLimitation) else (_ for _ in ()).throw(e)
 
     # Graphitron capabilities (executed)
-    run_source(sources.BFS_HYBRID, g, CompileOptions.full())  # vcp+ecp+hybrid
+    compile_program(sources.BFS_HYBRID, CompileOptions.full()).bind(g).run()  # vcp+ecp+hybrid
     run_cgaw(gw)  # weight writes
     run_ppr(g)  # many properties
     graphitron = {"vcp": True, "ecp": True, "hybrid": True, "weight": True,

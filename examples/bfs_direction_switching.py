@@ -1,14 +1,19 @@
 """Direction-switching BFS (paper Fig. 2) on a Table II dataset, comparing
 the unoptimized baseline / ThunderGP-style template / Graphitron engines.
 
+One Program per configuration, each bound once; the timing loop is pure
+``session.run(root=...)`` — the "post-synthesis accelerator execution"
+timing mode.
+
     PYTHONPATH=src python examples/bfs_direction_switching.py
 """
+import time
+
 import numpy as np
 
-from repro.core import CompileOptions
+import repro
 from repro.graph.datasets import make_dataset
 from repro.algorithms import sources
-from repro.algorithms.runners import make_warm_runner
 from repro.baselines import thundergp as tg
 
 
@@ -17,35 +22,41 @@ def main():
     root = int(np.argmax(g.out_degree))
     print(f"rmat graph: |V|={g.n_vertices} |E|={g.n_edges}, root={root}")
 
-    runs = {
-        "baseline (no optimizations)": make_warm_runner(
-            sources.BFS_ECP, g, CompileOptions.baseline(), {"root": root}
-        ),
-        "graphitron ECP (full opts)": make_warm_runner(
-            sources.BFS_ECP, g, CompileOptions.full(), {"root": root}
-        ),
-        "graphitron hybrid (Fig. 2)": make_warm_runner(
-            sources.BFS_HYBRID, g, CompileOptions.full(), {"root": root}
-        ),
+    sessions = {
+        "baseline (no optimizations)": repro.compile(
+            sources.BFS_ECP, repro.CompileOptions.baseline()
+        ).bind(g),
+        "graphitron ECP (full opts)": repro.compile(
+            sources.BFS_ECP, repro.CompileOptions.full()
+        ).bind(g),
+        "graphitron hybrid (Fig. 2)": repro.compile(
+            sources.BFS_HYBRID, repro.CompileOptions.full()
+        ).bind(g),
     }
-    import time
 
     ref = None
-    for name, run in runs.items():
+    for name, session in sessions.items():
+        session.run(root=root)  # warm: jit-compile every kernel launch path
         t0 = time.perf_counter()
-        res = run()
+        res = session.run(root=root)
         dt = time.perf_counter() - t0
         lvl = res.properties["old_level"]
         if ref is None:
             ref = lvl
         else:
             assert (lvl == ref).all(), "engines disagree!"
-        print(
-            f"{name:32s} {dt * 1e3:8.1f} ms  edges_traversed={res.stats.edges_traversed:>9d} "
-            f"(work reduction {runs and ''}{'' if res.stats.edges_traversed == 0 else f'{g.n_edges * res.stats.host_iterations / max(res.stats.edges_traversed, 1):.1f}x vs full sweeps'})"
+        sweeps = g.n_edges * res.stats.host_iterations
+        reduction = (
+            f"{sweeps / max(res.stats.edges_traversed, 1):.1f}x vs full sweeps"
+            if res.stats.edges_traversed
+            else ""
         )
+        print(f"{name:32s} {dt * 1e3:8.1f} ms  "
+              f"edges_traversed={res.stats.edges_traversed:>9d} "
+              f"(work reduction {reduction})")
     lt, st = tg.bfs_run(g, root)
-    print(f"{'thundergp template (GAS/ECP)':32s} {st.wall_time_s * 1e3:8.1f} ms  edges_traversed={st.edges_traversed:>9d}")
+    print(f"{'thundergp template (GAS/ECP)':32s} {st.wall_time_s * 1e3:8.1f} ms  "
+          f"edges_traversed={st.edges_traversed:>9d}")
     reached = int((ref >= 0).sum())
     print(f"reached {reached}/{g.n_vertices} vertices")
 

@@ -1,17 +1,25 @@
-"""Quickstart: author a graph algorithm in the Graphitron DSL, compile it,
-and run it on a synthetic social graph.
+"""Quickstart: author a graph algorithm in the Graphitron DSL, then
+compile once, bind to a graph, and run it with explicit parameters.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The whole public workflow is three calls:
+
+    program = repro.compile(src)      # compile once (content-hash cached)
+    session = program.bind(graph)     # bind to a graph + backend
+    result  = session.run(...)        # parameterized, validated run
 """
 import numpy as np
 
-from repro.core import CompileOptions, compile_source, Engine
+import repro
 from repro.graph import generators
 
 # Degree counting + a one-line "who is popular" query, written in the
 # paper's language (Fig. 1 syntax). The compiler classifies initDeg as a
 # vertex kernel and countIn as an edge kernel, detects that `indeg` is
 # scatter-written (shuffle path) and `total` is a global accumulator.
+# `threshold` is a host scalar — which makes it a declared run-time
+# parameter of the compiled Program.
 SRC = """
 element Vertex end
 element Edge end
@@ -45,22 +53,41 @@ end
 
 def main():
     graph = generators.power_law(5_000, 60_000, seed=0)
-    module = compile_source(SRC)
+
+    # 1. compile once — the Program is cached on a content hash of
+    #    (source, options) and knows its declared run-time parameters
+    program = repro.compile(SRC, repro.CompileOptions.full())
     print("=== MIR (the compiler's view of your program) ===")
-    print(module.describe())
+    print(program.describe())
+    print("\ndeclared parameters:",
+          ", ".join(p.describe() for p in program.params.values()))
 
-    engine = Engine(module, graph, CompileOptions.full(), argv=["prog", "social"])
-    result = engine.run()
+    # 2. bind to a graph — the Session owns lowered kernels + device state
+    session = program.bind(graph, argv=["prog", "social"])
 
+    # 3. run with explicit parameters, as many times as you like
+    result = session.run()  # threshold defaults to 16
     indeg = result.properties["indeg"]
     popular = result.properties["popular"]
     assert (indeg == graph.in_degree).all()
     assert result.properties["total"][0] == graph.n_edges
+
     print("\n=== results ===")
     print(f"vertices: {graph.n_vertices}, edges: {graph.n_edges}")
     print(f"popular vertices (indeg >= 16): {int(popular.sum())}")
     print(f"max in-degree: {int(indeg.max())}")
     print(f"kernel launches: {result.stats.kernel_launches}")
+
+    # same session, different parameter — no recompilation, state reset
+    lax = session.run(threshold=4)
+    print(f"popular vertices (indeg >= 4): {int(lax.properties['popular'].sum())}")
+
+    # the same Program binds to any number of graphs
+    small = generators.power_law(500, 4_000, seed=1)
+    r_small = repro.compile(SRC, repro.CompileOptions.full()).bind(small).run()
+    assert (r_small.properties["indeg"] == small.in_degree).all()
+    print(f"re-bound to |V|={small.n_vertices}: "
+          f"max in-degree {int(r_small.properties['indeg'].max())}")
 
 
 if __name__ == "__main__":

@@ -6,17 +6,17 @@ import sys
 
 import numpy as np
 
-from repro.core import CompileOptions, Engine, compile_source
+import repro
 from repro.graph.datasets import make_dataset
 
 
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "examples/algos/pagerank.gt"
     weighted = any(w in path for w in ("sssp", "cgaw"))
-    module = compile_source(open(path).read())
+    program = repro.compile(open(path).read(), repro.CompileOptions.full())
     g = make_dataset("AM", scale=0.01, seed=0, weighted=weighted)
-    eng = Engine(module, g, CompileOptions.full(), argv=["prog", "AM"])
-    res = eng.run()
+    session = program.bind(g, argv=["prog", "AM"])
+    res = session.run()
     print(f"{path}: ran on |V|={g.n_vertices} |E|={g.n_edges} "
           f"in {res.stats.wall_time_s:.3f}s, launches={res.stats.kernel_launches}")
     for name, arr in list(res.properties.items())[:4]:

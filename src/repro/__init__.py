@@ -1,3 +1,33 @@
-"""repro: Graphitron-on-TPU — DSL-driven graph processing + LM framework in JAX."""
+"""repro: Graphitron-on-TPU — DSL-driven graph processing + LM framework in JAX.
 
-__version__ = "0.1.0"
+Graph-program quickstart (compile once, bind many, run parameterized):
+
+    import repro
+
+    program = repro.compile(src)            # Program (content-hash cached)
+    session = program.bind(graph)           # Session on the local backend
+    result  = session.run(root=3)           # explicit run-time parameters
+"""
+
+from .core import (  # noqa: F401 - re-exported public API
+    CompileOptions,
+    Program,
+    ProgramError,
+    Session,
+    SessionPool,
+    compile,
+    compile_program,
+)
+
+__version__ = "0.2.0"
+
+__all__ = [
+    "CompileOptions",
+    "Program",
+    "ProgramError",
+    "Session",
+    "SessionPool",
+    "compile",
+    "compile_program",
+    "__version__",
+]

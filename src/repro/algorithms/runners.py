@@ -1,117 +1,133 @@
-"""Convenience runners: compile + run each algorithm on a GraphData.
+"""Convenience runners: thin wrappers over the Program/Session API.
 
-Each runner returns the algorithm's primary result array (mapped back to
-original vertex/edge ids) plus the EngineResult for stats inspection.
+Each runner compiles its algorithm once (``repro.compile`` is keyed by a
+content hash of source + options, so repeated calls share one artifact),
+binds a session to the caller's graph, and runs it with explicit
+parameters. Each returns the algorithm's primary result array (mapped
+back to original vertex/edge ids) plus the EngineResult for stats
+inspection.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core import CompileOptions, Engine, compile_source
+from ..core import CompileOptions
+from ..core.program import compile_program
 from ..graph.storage import GraphData
 from . import sources
 
-_MODULE_CACHE: dict = {}
+_ARGV = ["prog", "<graph>"]
 
 
-def _module(src: str):
-    key = id(src)
-    if key not in _MODULE_CACHE:
-        _MODULE_CACHE[key] = compile_source(src)
-    return _MODULE_CACHE[key]
-
-
-def _run(src: str, graph: GraphData, options: CompileOptions, overrides: dict):
-    eng = Engine(_module(src), graph, options, argv=["prog", "<graph>"])
-    eng.host_env.update(overrides)
-    return eng.run()
+def _run(
+    src: str,
+    graph: GraphData,
+    options: Optional[CompileOptions],
+    params: Dict,
+    backend: str = "local",
+):
+    session = compile_program(src, options).bind(graph, backend=backend, argv=_ARGV)
+    return session.run(**params)
 
 
 def run_bfs(
     graph: GraphData,
     root: int = 0,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.BFS_ECP, graph, options, {"root": root})
+    res = _run(sources.BFS_ECP, graph, options, {"root": root}, backend)
     return res.properties["old_level"], res
 
 
 def run_bfs_hybrid(
     graph: GraphData,
     root: int = 0,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.BFS_HYBRID, graph, options, {"root": root})
+    res = _run(sources.BFS_HYBRID, graph, options, {"root": root}, backend)
     return res.properties["old_level"], res
 
 
 def run_pagerank(
     graph: GraphData,
     iters: int = 20,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.PAGERANK, graph, options, {"iters": iters})
+    res = _run(sources.PAGERANK, graph, options, {"iters": iters}, backend)
     return res.properties["rank"], res
 
 
 def run_sssp(
     graph: GraphData,
     root: int = 0,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.SSSP, graph, options, {"root": root})
+    res = _run(sources.SSSP, graph, options, {"root": root}, backend)
     return res.properties["SP"], res
 
 
 def run_ppr(
     graph: GraphData,
     source: int = 0,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
     max_iters: int = 100,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.PPR, graph, options, {"source": source, "max_iters": max_iters})
+    res = _run(
+        sources.PPR, graph, options, {"source": source, "max_iters": max_iters}, backend
+    )
     return res.properties["PR_old"], res
 
 
 def run_cgaw(
     graph: GraphData,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.CGAW, graph, options, {})
+    res = _run(sources.CGAW, graph, options, {}, backend)
     return res.properties["weight"], res
 
 
 def run_wcc(
     graph: GraphData,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.WCC, graph, options, {})
+    res = _run(sources.WCC, graph, options, {}, backend)
     return res.properties["comp"], res
 
 
 def run_kcore(
     graph: GraphData,
     k: int = 2,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
+    backend: str = "local",
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.KCORE, graph, options, {"k": k})
+    res = _run(sources.KCORE, graph, options, {"k": k}, backend)
     return res.properties["alive"], res
 
 
-def make_warm_runner(src: str, graph: GraphData, options: CompileOptions,
-                     overrides: Optional[dict] = None):
-    """Build an engine once (compiling all kernels on the first call) and
-    return a zero-arg callable that resets + re-runs it — the
-    "post-synthesis accelerator execution" timing mode."""
-    eng = Engine(_module(src), graph, options, argv=["prog", "<graph>"])
-    ov = overrides or {}
+def make_warm_runner(
+    src: str,
+    graph: GraphData,
+    options: Optional[CompileOptions] = None,
+    overrides: Optional[dict] = None,
+    backend: str = "local",
+):
+    """Bind a session once (compiling all kernels on the first call) and
+    return a zero-arg callable that re-runs it — the "post-synthesis
+    accelerator execution" timing mode."""
+    session = compile_program(src, options).bind(graph, backend=backend, argv=_ARGV)
+    params = dict(overrides or {})
 
     def run():
-        eng.reset()
-        eng.host_env.update(ov)
-        return eng.run()
+        return session.run(**params)
 
     run()  # warm: jit-compile every kernel launch path
     return run

@@ -19,8 +19,8 @@ is between two tuned systems, as in the paper.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from dataclasses import dataclass
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

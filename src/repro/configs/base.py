@@ -8,7 +8,7 @@ grid with the documented skips (see DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 

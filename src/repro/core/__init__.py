@@ -1,13 +1,63 @@
-"""Graphitron core: the paper's DSL + compiler, lowered to JAX/Pallas."""
+"""Graphitron core: the paper's DSL + compiler, lowered to JAX/Pallas.
+
+Public surface — compile once, bind many, run parameterized:
+
+    import repro
+
+    program = repro.compile(src, options)         # cached on content hash
+    session = program.bind(graph)                 # or backend="distributed"
+    result  = session.run(root=3, iters=20)       # validated parameters
+
+* :class:`Program` — the compiled artifact; knows its declared run-time
+  parameters (the program's host scalars) and binds to any number of
+  graphs and backends.
+* :class:`Session` — one (program, graph, backend) binding; owns lowered
+  kernels and device state, reusable across runs.
+* :class:`SessionPool` — N sessions over one bound graph for batch/async
+  query serving.
+* ``backend="local"`` wraps the single-device :class:`Engine`;
+  ``backend="distributed"`` wraps :class:`DistEngine` (multi-device
+  shuffle supersteps). New backends plug in via
+  :func:`~repro.core.session.register_backend`.
+
+``compile_source`` / ``run_source`` and hand-built :class:`Engine` objects
+remain as deprecated shims for older callers.
+"""
 from .engine import Engine, EngineResult, compile_source, run_source
 from .options import CompileOptions
 from .parser import parse
+from .program import (
+    ParamSpec,
+    Program,
+    ProgramError,
+    clear_program_cache,
+    compile_program,
+)
+from .program import compile  # noqa: A004 - intentional repro.compile verb
 from .semantic import analyze
+from .session import (
+    ExecutionBackend,
+    Session,
+    SessionError,
+    SessionPool,
+    register_backend,
+)
 
 __all__ = [
     "Engine",
     "EngineResult",
     "CompileOptions",
+    "Program",
+    "ProgramError",
+    "ParamSpec",
+    "Session",
+    "SessionError",
+    "SessionPool",
+    "ExecutionBackend",
+    "compile",
+    "compile_program",
+    "clear_program_cache",
+    "register_backend",
     "compile_source",
     "run_source",
     "parse",

@@ -23,7 +23,6 @@ Semantics notes (mirror the paper's pipeline transforms):
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 

@@ -15,19 +15,30 @@ Vertices are range-partitioned across D devices; each edge lives on its
 
 ``DistGraph.push_step`` runs one superstep under ``shard_map``; it is the
 distribution layer used by the multi-device graph tests and benchmarks.
+
+:class:`DistEngine` (bottom of this module) is the full execution backend
+built on top of it: it interprets the same host program as the local
+:class:`~repro.core.engine.Engine`, but launches every edge kernel whose
+body fits the ``src-gather -> dst-scatter-reduce`` shape as a distributed
+superstep across the device mesh. Kernels outside that shape (multi-write
+bodies, edge-weight mutation, neighbor loops) transparently fall back to
+the local lowering, so any program that runs locally runs distributed
+with identical results.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Callable, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from . import backend, fir, mir
+from .engine import Engine
+from .options import CompileOptions
 from ..graph.storage import GraphData
 
 
@@ -149,3 +160,268 @@ def make_push_step(
         return red.reshape(-1)
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Generalized distributed edge-kernel superstep
+# ---------------------------------------------------------------------------
+
+
+class _NotDistributable(Exception):
+    """Kernel body falls outside the src-gather -> dst-reduce shape."""
+
+
+def _lower_dist_expr(
+    module: mir.Module,
+    kern: mir.Kernel,
+    e: fir.Expr,
+    src_props: Set[str],
+    weight_ok: bool,
+) -> Callable:
+    """Lower a per-edge expression to ``fn(env, w, scalars) -> array``.
+
+    ``env`` maps property name -> values gathered at the edge's source,
+    ``w`` is the per-edge weight, ``scalars`` the host scalar environment.
+    Anything needing dst-side gathers, accumulator cells, or id
+    translation raises :class:`_NotDistributable` (local fallback).
+    """
+    if isinstance(e, fir.IntLit):
+        v = jnp.int32(e.value)
+        return lambda env, w, s: v
+    if isinstance(e, fir.FloatLit):
+        v = jnp.float32(e.value)
+        return lambda env, w, s: v
+    if isinstance(e, fir.BoolLit):
+        v = jnp.bool_(e.value)
+        return lambda env, w, s: v
+    if isinstance(e, fir.Ident):
+        name = e.name
+        if name == kern.weight_param:
+            if not weight_ok:
+                raise _NotDistributable("edge weights are mutated elsewhere")
+            return lambda env, w, s: w
+        if name in module.scalars:
+            return lambda env, w, s: s[name]
+        raise _NotDistributable(f"identifier {name!r}")
+    if isinstance(e, fir.Index):
+        base, idx = e.base, e.index
+        if (
+            isinstance(base, fir.Ident)
+            and base.name in module.properties
+            and isinstance(idx, fir.Ident)
+            and idx.name == kern.src_param
+            and not module.properties[base.name].is_edge
+        ):
+            prop = base.name
+            src_props.add(prop)
+            return lambda env, w, s: env[prop]
+        raise _NotDistributable("non-src-indexed property read")
+    if isinstance(e, fir.BinOp):
+        fa = _lower_dist_expr(module, kern, e.lhs, src_props, weight_ok)
+        fb = _lower_dist_expr(module, kern, e.rhs, src_props, weight_ok)
+        op = e.op
+        return lambda env, w, s: backend._binop(op, fa(env, w, s), fb(env, w, s))
+    if isinstance(e, fir.UnaryOp):
+        fv = _lower_dist_expr(module, kern, e.operand, src_props, weight_ok)
+        if e.op == "!":
+            return lambda env, w, s: jnp.logical_not(fv(env, w, s))
+        return lambda env, w, s: -fv(env, w, s)
+    if isinstance(e, fir.Call):
+        if e.func == "original_id":
+            raise _NotDistributable("original_id needs the relabel table")
+        fargs = [
+            _lower_dist_expr(module, kern, a, src_props, weight_ok) for a in e.args
+        ]
+        func = e.func
+        return lambda env, w, s: backend._builtin(func, [f(env, w, s) for f in fargs])
+    raise _NotDistributable(type(e).__name__)
+
+
+def _match_dist_kernel(kern: mir.Kernel) -> Tuple[Optional[fir.Expr], str, str, fir.Expr]:
+    """Match ``[if cond] prop[dst] op= value`` and return its pieces."""
+    body = list(kern.func.body)
+    cond: Optional[fir.Expr] = None
+    if (
+        len(body) == 1
+        and isinstance(body[0], fir.If)
+        and not body[0].else_body
+        and len(body[0].then_body) == 1
+    ):
+        cond = body[0].cond
+        st = body[0].then_body[0]
+    elif len(body) == 1:
+        st = body[0]
+    else:
+        raise _NotDistributable("multi-statement body")
+    if not isinstance(st, fir.ReduceAssign) or st.op not in ("+", "min", "max"):
+        raise _NotDistributable("not a +/min/max reduction")
+    tgt = st.target
+    if not (
+        isinstance(tgt, fir.Index)
+        and isinstance(tgt.base, fir.Ident)
+        and isinstance(tgt.index, fir.Ident)
+        and tgt.index.name == kern.dst_param
+    ):
+        raise _NotDistributable("write is not prop[dst]")
+    return cond, tgt.base.name, st.op, st.value
+
+
+def make_expr_push_step(
+    dg: DistGraph,
+    src_props: List[str],
+    val_fn: Callable,
+    cond_fn: Optional[Callable],
+    reduce_op: str,
+    out_dtype,
+):
+    """Build a jitted distributed superstep for one lowered edge kernel.
+
+    Like :func:`make_push_step`, but the per-edge value/condition read an
+    arbitrary set of src-gathered properties plus host scalars:
+
+        step(props: {name: [Vpad]}, scalars: {name: 0-d}) -> reduced [Vpad]
+
+    The returned array combines with the destination property via the
+    kernel's reduce op (identity-filled where no edge contributed).
+    """
+    mesh, axis, sl = dg.mesh, dg.axis, dg.slice_len
+    d = dg.n_devices
+    vpad = dg.n_vertices_padded
+    src_l = jnp.asarray(dg.src_local)
+    dst_l = jnp.asarray(dg.dst_local)
+    w = jnp.asarray(dg.weight)
+    valid = jnp.asarray(dg.valid)
+    pspec = P(axis)
+    seg = {
+        "+": jax.ops.segment_sum,
+        "min": jax.ops.segment_min,
+        "max": jax.ops.segment_max,
+    }[reduce_op]
+    ident = _identity(reduce_op, out_dtype)
+
+    def local_step(prop_slices, scalars, src_b, dst_b, w_b, valid_b):
+        # [1, D, Emax] shards (leading src-owner axis sharded away)
+        src_b, dst_b, w_b, valid_b = src_b[0], dst_b[0], w_b[0], valid_b[0]
+        env = {n: ps.reshape(-1)[src_b] for n, ps in prop_slices.items()}
+        vals = val_fn(env, w_b, scalars).astype(out_dtype)
+        ok = valid_b
+        if cond_fn is not None:
+            ok = jnp.logical_and(ok, cond_fn(env, w_b, scalars).astype(jnp.bool_))
+        vals = jnp.where(ok, vals, ident)
+        # shuffle across chips: route each dst-owner bucket to its device
+        vals_r = jax.lax.all_to_all(vals[None], axis, 1, 0, tiled=False)[:, 0]
+        dst_r = jax.lax.all_to_all(dst_b[None], axis, 1, 0, tiled=False)[:, 0]
+        ok_r = jax.lax.all_to_all(ok[None], axis, 1, 0, tiled=False)[:, 0]
+        # local conflict-free reduce (sorted segment reduction)
+        flat_v = jnp.where(ok_r, vals_r, ident).reshape(-1)
+        flat_d = jnp.where(ok_r, dst_r, sl).reshape(-1)
+        order = jnp.argsort(flat_d)
+        red = seg(flat_v[order], flat_d[order], sl + 1, indices_are_sorted=True)[:sl]
+        return red[None]
+
+    smapped = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(pspec, P(), pspec, pspec, pspec, pspec),
+        out_specs=pspec,
+        check_rep=False,
+    )
+
+    @jax.jit
+    def step(props: Dict[str, jnp.ndarray], scalars: Dict[str, jnp.ndarray]):
+        grids = {}
+        for n in src_props:
+            arr = props[n]
+            padded = jnp.zeros((vpad,), arr.dtype).at[: arr.shape[0]].set(arr)
+            grids[n] = padded.reshape(d, sl)
+        red = smapped(grids, scalars, src_l, dst_l, w, valid)
+        return red.reshape(-1)
+
+    return step
+
+
+class DistEngine(Engine):
+    """Multi-device engine: the shared host interpreter of :class:`Engine`
+    plus distributed supersteps for scatter-reduce edge kernels.
+
+    Construction partitions the graph across ``mesh`` lazily (on the first
+    distributable edge-kernel launch). Kernels that read edge weights are
+    only distributed when no kernel in the module mutates weights (the
+    partitioned weight buckets are built once at partition time).
+    """
+
+    def __init__(
+        self,
+        module: mir.Module,
+        graph: GraphData,
+        options: Optional[CompileOptions] = None,
+        argv: Optional[List[str]] = None,
+        mesh: Optional[Mesh] = None,
+        axis: str = "data",
+    ):
+        super().__init__(module, graph, options, argv=argv)
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), (axis,))
+        self.mesh = mesh
+        self.axis = axis
+        self._dist_graph: Optional[DistGraph] = None
+        self._dist_lowered: Dict[str, Optional[tuple]] = {}
+        self._weights_static = not any(
+            k.writes_weight for k in module.kernels.values()
+        )
+
+    # -- lazy partition -----------------------------------------------------
+    def _partitioned(self) -> DistGraph:
+        if self._dist_graph is None:
+            self._dist_graph = partition_graph(self.graph, self.mesh, self.axis)
+        return self._dist_graph
+
+    # -- per-kernel distributed lowering ------------------------------------
+    def _dist_kernel(self, name: str) -> Optional[tuple]:
+        if name in self._dist_lowered:
+            return self._dist_lowered[name]
+        kern = self.module.kernels[name]
+        entry = None
+        try:
+            cond, out_prop, op, value = _match_dist_kernel(kern)
+            src_props: Set[str] = set()
+            val_fn = _lower_dist_expr(
+                self.module, kern, value, src_props, self._weights_static
+            )
+            cond_fn = (
+                _lower_dist_expr(self.module, kern, cond, src_props,
+                                 self._weights_static)
+                if cond is not None
+                else None
+            )
+            out_dtype = self.state[out_prop].dtype
+            step = make_expr_push_step(
+                self._partitioned(), sorted(src_props), val_fn, cond_fn, op, out_dtype
+            )
+            entry = (step, out_prop, op, sorted(src_props))
+        except _NotDistributable:
+            entry = None
+        self._dist_lowered[name] = entry
+        return entry
+
+    # -- launch override -----------------------------------------------------
+    def launch(self, name: str):
+        kern = self.module.kernels.get(name)
+        if kern is not None and kern.kind is mir.KernelKind.EDGE:
+            entry = self._dist_kernel(name)
+            if entry is not None:
+                step, out_prop, op, src_props = entry
+                scalars = self._kernel_scalars(name)
+                props = {p: self.state[p] for p in src_props}
+                red = step(props, scalars)[: self.graph.n_vertices]
+                cur = self.state[out_prop]
+                self.state[out_prop] = backend.combine(
+                    op, cur, red.astype(cur.dtype)
+                )
+                self.stats.kernel_launches[name] = (
+                    self.stats.kernel_launches.get(name, 0) + 1
+                )
+                self.stats.dist_supersteps += 1
+                self.stats.edges_traversed += self.graph.n_edges
+                return
+        super().launch(name)

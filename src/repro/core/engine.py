@@ -45,6 +45,7 @@ class EngineStats:
     kernel_launches: Dict[str, int] = field(default_factory=dict)
     compacted_launches: int = 0
     full_launches: int = 0
+    dist_supersteps: int = 0
     edges_traversed: int = 0
     host_iterations: int = 0
     wall_time_s: float = 0.0
@@ -68,9 +69,10 @@ class Engine:
         self,
         module: mir.Module,
         graph: GraphData,
-        options: CompileOptions = CompileOptions(),
+        options: Optional[CompileOptions] = None,
         argv: Optional[List[str]] = None,
     ):
+        options = options if options is not None else CompileOptions()
         self.module = module
         self.options = options
         self.argv = argv or []
@@ -491,21 +493,26 @@ class Engine:
 
 
 # ---------------------------------------------------------------------------
-# one-call compile+run convenience
+# deprecated one-call shims (use repro.compile(...).bind(...).run(...))
 # ---------------------------------------------------------------------------
 
 
 def compile_source(src: str) -> mir.Module:
-    from .parser import parse
+    """Deprecated: use ``repro.compile(src)`` which returns a cached
+    :class:`~repro.core.program.Program` (this shim shares its cache)."""
+    from .program import compile_program
 
-    return semantic.analyze(parse(src))
+    return compile_program(src).module
 
 
 def run_source(
     src: str,
     graph: GraphData,
-    options: CompileOptions = CompileOptions(),
+    options: Optional[CompileOptions] = None,
     argv: Optional[List[str]] = None,
 ) -> EngineResult:
-    module = compile_source(src)
+    """Deprecated: use ``repro.compile(src, options).bind(graph).run(...)``."""
+    from .program import compile_program
+
+    module = compile_program(src, options).module
     return Engine(module, graph, options, argv=argv).run()

@@ -7,7 +7,7 @@ front-end behaviour described in paper §III-B1.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, List
+from typing import List
 
 KEYWORDS = {
     "element", "end", "const", "func", "var", "if", "else", "while", "for",

@@ -1,0 +1,221 @@
+"""Compile-once / bind-many front door of the toolchain.
+
+The paper's workflow is: author an algorithm once, let the compiler pick
+the execution strategy (pipelining, shuffling, memory layout) per target.
+This module is the Python surface of that promise:
+
+    program = repro.compile(src, options)        # compile once (cached)
+    session = program.bind(graph)                # bind to one graph+backend
+    result  = session.run(root=3, iters=20)      # parameterized execution
+
+* :func:`compile` is keyed by a **content hash** of (source, options), so
+  identical programs share one compiled artifact no matter how many string
+  objects carry them, and distinct programs can never collide (the old
+  ``id(src)``-keyed cache could alias unrelated sources after GC).
+* Every host scalar declared in the program (``const root: int = 0;``)
+  becomes a declared **run-time parameter** of the :class:`Program`.
+  Scalars declared *without* an initializer are required at ``run()``.
+* :meth:`Program.bind` places the artifact onto an execution backend
+  ("local" single-device engine or "distributed" multi-device engine) and
+  returns a reusable :class:`~repro.core.session.Session`.
+"""
+from __future__ import annotations
+
+import hashlib
+import numbers
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple, TYPE_CHECKING
+
+from . import mir, semantic
+from .options import CompileOptions
+from .parser import parse
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from ..graph.storage import GraphData
+    from .session import Session, SessionPool
+
+
+class ProgramError(Exception):
+    """Raised for bad compile/bind/run usage at the public API layer."""
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One declared run-time parameter (a host scalar of the program)."""
+
+    name: str
+    scalar: str  # 'int' | 'float' | 'bool'
+    required: bool  # declared without an initializer
+
+    def describe(self) -> str:
+        kind = "required" if self.required else "optional"
+        return f"{self.name}: {self.scalar} ({kind})"
+
+
+def _coerce_param(spec: ParamSpec, value: Any):
+    """Validate + coerce one user-supplied parameter to its declared type."""
+    try:
+        if spec.scalar == "bool":
+            if isinstance(value, (bool,)) or value in (0, 1):
+                return bool(value)
+        elif spec.scalar == "int":
+            if isinstance(value, bool):
+                return int(value)
+            if isinstance(value, numbers.Integral):
+                return int(value)
+            if isinstance(value, numbers.Real) and float(value).is_integer():
+                return int(value)
+        elif spec.scalar == "float":
+            if isinstance(value, numbers.Real) and not isinstance(value, bool):
+                return float(value)
+    except (TypeError, ValueError):
+        pass  # e.g. multi-element arrays: ambiguous comparisons -> mismatch
+    raise ProgramError(
+        f"parameter {spec.name!r} expects {spec.scalar}, got "
+        f"{type(value).__name__} ({value!r})"
+    )
+
+
+def source_fingerprint(src: str, options: CompileOptions) -> str:
+    """Content hash keying the program cache: source text + options."""
+    h = hashlib.sha256()
+    h.update(src.encode("utf-8"))
+    h.update(b"\x00")
+    h.update(repr(options).encode("utf-8"))
+    return h.hexdigest()
+
+
+class Program:
+    """A compiled Graphitron artifact, independent of any graph.
+
+    Holds the analyzed MIR module, the compile options it was built with,
+    and the declared run-time parameters. Bind it to as many graphs and
+    backends as you like; each :meth:`bind` returns an isolated
+    :class:`~repro.core.session.Session`.
+    """
+
+    def __init__(self, module: mir.Module, options: CompileOptions,
+                 fingerprint: str, source: str):
+        self.module = module
+        self.options = options
+        self.fingerprint = fingerprint
+        self.source = source
+        self.params: Dict[str, ParamSpec] = {
+            s.name: ParamSpec(s.name, s.scalar, required=s.init is None)
+            for s in module.scalars.values()
+        }
+
+    # -- introspection ------------------------------------------------------
+    def describe(self) -> str:
+        """Textual MIR dump (the analogue of the generated-OpenCL listing)."""
+        return self.module.describe()
+
+    def __repr__(self) -> str:
+        return (
+            f"Program({self.fingerprint[:12]}, kernels={sorted(self.module.kernels)}, "
+            f"params=[{', '.join(p.describe() for p in self.params.values())}])"
+        )
+
+    # -- parameter validation ----------------------------------------------
+    def validate_params(self, overrides: Dict[str, Any]) -> Dict[str, Any]:
+        """Check run() kwargs against the declared parameters.
+
+        Unknown names, missing required parameters, and type mismatches all
+        raise :class:`ProgramError` with an actionable message.
+        """
+        unknown = sorted(set(overrides) - set(self.params))
+        if unknown:
+            declared = ", ".join(p.describe() for p in self.params.values()) or "<none>"
+            raise ProgramError(
+                f"unknown run-time parameter(s) {unknown}; this program declares: "
+                f"{declared}. Declare a host scalar (`const name: int = 0;`) to "
+                f"add a parameter."
+            )
+        out: Dict[str, Any] = {}
+        for name, spec in self.params.items():
+            if name in overrides:
+                out[name] = _coerce_param(spec, overrides[name])
+            elif spec.required:
+                raise ProgramError(
+                    f"missing required parameter {name!r} (declared without an "
+                    f"initializer); pass {name}=<{spec.scalar}> to run()"
+                )
+        return out
+
+    # -- binding ------------------------------------------------------------
+    def bind(self, graph: "GraphData", backend: str = "local", *,
+             argv: Optional[list] = None, **backend_opts) -> "Session":
+        """Place this program onto ``graph`` using the named backend.
+
+        The returned :class:`Session` owns the lowered kernels and device
+        state and is reusable across many parameterized runs.
+        """
+        from .session import Session
+
+        return Session(self, graph, backend=backend, argv=argv, **backend_opts)
+
+    def pool(self, graph: "GraphData", size: int = 2, backend: str = "local", *,
+             argv: Optional[list] = None, **backend_opts) -> "SessionPool":
+        """Convenience: a :class:`SessionPool` of ``size`` sessions bound to
+        ``graph`` for batch/async query serving."""
+        from .session import SessionPool
+
+        return SessionPool(self, graph, backend=backend, size=size, argv=argv,
+                           **backend_opts)
+
+
+# ---------------------------------------------------------------------------
+# content-hashed program cache
+# ---------------------------------------------------------------------------
+
+# keyed by source_fingerprint(src, options) — the hash already folds the
+# options repr in, so the string alone discriminates every (src, opts) pair
+_PROGRAM_CACHE: Dict[str, Program] = {}
+# the analyzed MIR module is options-independent: cache it on the source
+# hash alone so ablation sweeps over options don't re-run the front-end
+_MODULE_CACHE: Dict[str, mir.Module] = {}
+_CACHE_LOCK = threading.Lock()
+
+
+def compile_program(src: str, options: Optional[CompileOptions] = None) -> Program:
+    """Compile DSL source into a :class:`Program` (cached).
+
+    The cache key is a content hash of (source, options): the same text
+    always returns the same artifact, different options recompile.
+    """
+    if not isinstance(src, str):
+        raise ProgramError(f"expected DSL source text, got {type(src).__name__}")
+    opts = options if options is not None else CompileOptions()
+    key = source_fingerprint(src, opts)
+    src_key = hashlib.sha256(src.encode("utf-8")).hexdigest()
+    with _CACHE_LOCK:
+        prog = _PROGRAM_CACHE.get(key)
+        module = _MODULE_CACHE.get(src_key)
+    if prog is not None:
+        return prog
+    if module is None:
+        module = semantic.analyze(parse(src))
+    prog = Program(module, opts, key, src)
+    with _CACHE_LOCK:
+        # another thread may have raced us; keep the first artifacts
+        module = _MODULE_CACHE.setdefault(src_key, module)
+        prog = _PROGRAM_CACHE.setdefault(key, prog)
+    return prog
+
+
+# `repro.compile(src, options)` reads naturally at call sites; the builtin
+# is still reachable as `builtins.compile`.
+compile = compile_program
+
+
+def clear_program_cache() -> None:
+    """Drop all cached programs and modules (test isolation / memory)."""
+    with _CACHE_LOCK:
+        _PROGRAM_CACHE.clear()
+        _MODULE_CACHE.clear()
+
+
+def program_cache_size() -> int:
+    with _CACHE_LOCK:
+        return len(_PROGRAM_CACHE)

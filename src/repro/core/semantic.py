@@ -15,7 +15,6 @@ Performs (paper §III-B2):
 """
 from __future__ import annotations
 
-import copy
 from typing import Dict, List, Optional, Set
 
 from . import fir, mir

@@ -1,0 +1,274 @@
+"""Sessions: a bound (program, graph, backend) triple you run many times.
+
+A :class:`Session` owns lowered kernels and device state for one graph on
+one execution backend, and exposes exactly one way to execute: explicit,
+validated keyword parameters —
+
+    session = program.bind(graph, backend="local")
+    result = session.run(root=3)
+
+replacing the old pattern of constructing an ``Engine`` by hand and
+mutating ``engine.host_env`` between runs. Backends implement the
+:class:`ExecutionBackend` protocol; "local" wraps the single-device
+:class:`~repro.core.engine.Engine` and "distributed" wraps the
+multi-device :class:`~repro.core.dist_engine.DistEngine` (shard_map +
+all_to_all shuffle supersteps). New backends register via
+:func:`register_backend`.
+
+:class:`SessionPool` holds N sessions over the same bound graph and
+serves batch/async query streams — the serving path used by
+``repro.launch.serve --graph``.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+from .engine import EngineResult
+from .program import Program, ProgramError
+
+try:  # pragma: no cover - trivially importable in-repo
+    from ..graph.storage import GraphData
+except ImportError:  # pragma: no cover
+    GraphData = Any  # type: ignore
+
+
+class SessionError(Exception):
+    pass
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """What a backend must provide to host a Session.
+
+    The lifecycle per ``run()`` is reset -> apply_params -> execute; the
+    backend keeps compiled/lowered kernels warm across the reset.
+    """
+
+    name: str
+
+    def reset(self) -> None:  # pragma: no cover - protocol
+        ...
+
+    def apply_params(self, params: Dict[str, Any]) -> None:  # pragma: no cover
+        ...
+
+    def execute(self) -> EngineResult:  # pragma: no cover
+        ...
+
+
+class EngineBackend:
+    """Backend over any :class:`~repro.core.engine.Engine` (sub)class: the
+    run lifecycle (reset -> apply_params -> execute) is engine-independent,
+    so every engine flavor shares this one implementation."""
+
+    def __init__(self, name: str, engine):
+        self.name = name
+        self.engine = engine
+
+    def reset(self) -> None:
+        self.engine.reset()
+
+    def apply_params(self, params: Dict[str, Any]) -> None:
+        self.engine.host_env.update(params)
+
+    def execute(self) -> EngineResult:
+        return self.engine.run()
+
+
+def LocalBackend(program: Program, graph: GraphData,
+                 argv: Optional[list] = None) -> EngineBackend:
+    """Single-device execution: the paper's one-accelerator system."""
+    from .engine import Engine
+
+    return EngineBackend(
+        "local", Engine(program.module, graph, program.options, argv=argv)
+    )
+
+
+def DistributedBackend(program: Program, graph: GraphData,
+                       argv: Optional[list] = None, mesh=None,
+                       axis: str = "data") -> EngineBackend:
+    """Multi-device execution: edge kernels become shuffle supersteps
+    across the device mesh (ForeGraph-style multi-accelerator scaling)."""
+    from .dist_engine import DistEngine
+
+    return EngineBackend(
+        "distributed",
+        DistEngine(program.module, graph, program.options, argv=argv,
+                   mesh=mesh, axis=axis),
+    )
+
+
+_BACKENDS: Dict[str, Callable[..., ExecutionBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., ExecutionBackend]) -> None:
+    """Register an execution backend under ``name`` for Program.bind()."""
+    _BACKENDS[name] = factory
+
+
+def backend_names() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+register_backend("local", LocalBackend)
+register_backend("distributed", DistributedBackend)
+
+
+class Session:
+    """One program bound to one graph on one backend; run it many times.
+
+    ``run(**params)`` validates the keyword parameters against the
+    program's declared host scalars, resets device/host state (keeping
+    lowered kernels warm), applies the parameters, and executes.
+    """
+
+    def __init__(self, program: Program, graph: GraphData, backend: str = "local",
+                 *, argv: Optional[list] = None, **backend_opts):
+        if backend not in _BACKENDS:
+            raise SessionError(
+                f"unknown backend {backend!r}; available: {backend_names()}"
+            )
+        self.program = program
+        self.graph = graph
+        self.backend_name = backend
+        argv = list(argv) if argv is not None else ["prog", "<graph>"]
+        self.backend: ExecutionBackend = _BACKENDS[backend](
+            program, graph, argv=argv, **backend_opts
+        )
+        self.runs = 0
+        self._lock = threading.Lock()
+
+    def run(self, **params) -> EngineResult:
+        """Execute the bound program with explicit run-time parameters."""
+        coerced = self.program.validate_params(params)
+        with self._lock:  # a Session is a stateful device context
+            self.backend.reset()
+            self.backend.apply_params(coerced)
+            result = self.backend.execute()
+            self.runs += 1
+            return result
+
+    def run_many(self, param_sets: Sequence[Dict[str, Any]]) -> List[EngineResult]:
+        """Run a sequence of parameter sets back-to-back (results in order)."""
+        return [self.run(**p) for p in param_sets]
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Release the session (hook for future device-owning backends)."""
+
+    def __repr__(self) -> str:
+        return (
+            f"Session({self.program.fingerprint[:12]} on {self.backend_name}, "
+            f"|V|={getattr(self.graph, 'n_vertices', '?')}, runs={self.runs})"
+        )
+
+
+class SessionPool:
+    """N worker sessions over one (program, graph, backend): batch serving.
+
+    Each worker owns an independent session (its own device state and its
+    own jitted kernels), so queries execute concurrently — but each worker
+    also pays its own one-time kernel-compilation cost on its first run;
+    call :meth:`warmup` before latency-sensitive serving. ``submit``
+    returns a Future; ``run_batch`` preserves submission order in its
+    result list.
+    """
+
+    def __init__(self, program: Program, graph: GraphData, backend: str = "local",
+                 size: int = 2, *, argv: Optional[list] = None, **backend_opts):
+        if size < 1:
+            raise SessionError("SessionPool size must be >= 1")
+        self.program = program
+        self.graph = graph
+        self.size = size
+        self._sessions = [
+            Session(program, graph, backend=backend, argv=argv, **backend_opts)
+            for _ in range(size)
+        ]
+        self._idle: "list[Session]" = list(self._sessions)
+        self._idle_lock = threading.Lock()
+        self._idle_ready = threading.Condition(self._idle_lock)
+        self._executor = ThreadPoolExecutor(
+            max_workers=size, thread_name_prefix="repro-session"
+        )
+        self._closed = False
+
+    # -- scheduling ---------------------------------------------------------
+    def _acquire(self) -> Session:
+        with self._idle_ready:
+            while not self._idle:
+                self._idle_ready.wait()
+            return self._idle.pop()
+
+    def _release(self, sess: Session) -> None:
+        with self._idle_ready:
+            self._idle.append(sess)
+            self._idle_ready.notify()
+
+    def _run_one(self, params: Dict[str, Any]) -> EngineResult:
+        sess = self._acquire()
+        try:
+            return sess.run(**params)
+        finally:
+            self._release(sess)
+
+    # -- public API ---------------------------------------------------------
+    def warmup(self, **params) -> None:
+        """Run one query on EVERY worker session so each jit-compiles its
+        kernel launch paths before real traffic arrives. Warmups run
+        concurrently (XLA compilation releases the GIL)."""
+        if self._closed:
+            raise SessionError("SessionPool is closed")
+        self.program.validate_params(params)
+        futures = [self._executor.submit(s.run, **params) for s in self._sessions]
+        for f in futures:
+            f.result()
+
+    def submit(self, **params) -> "Future[EngineResult]":
+        """Async: enqueue one parameterized query, get a Future."""
+        if self._closed:
+            raise SessionError("SessionPool is closed")
+        self.program.validate_params(params)  # fail fast on the caller thread
+        return self._executor.submit(self._run_one, params)
+
+    def run_batch(self, param_sets: Sequence[Dict[str, Any]]) -> List[EngineResult]:
+        """Batch: run every parameter set; results in submission order."""
+        futures = [self.submit(**p) for p in param_sets]
+        return [f.result() for f in futures]
+
+    def close(self, wait: bool = True) -> None:
+        self._closed = True
+        self._executor.shutdown(wait=wait)
+        for s in self._sessions:
+            s.close()
+
+    def __enter__(self) -> "SessionPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return f"SessionPool(size={self.size}, program={self.program.fingerprint[:12]})"
+
+
+__all__ = [
+    "ExecutionBackend",
+    "EngineBackend",
+    "LocalBackend",
+    "DistributedBackend",
+    "Session",
+    "SessionError",
+    "SessionPool",
+    "ProgramError",
+    "register_backend",
+    "backend_names",
+]

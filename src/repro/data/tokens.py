@@ -12,11 +12,11 @@ on it, unlike uniform noise), built per-seed.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 
-from ..configs.base import ArchConfig, ShapeSpec
+from ..configs.base import ArchConfig
 
 
 @dataclass

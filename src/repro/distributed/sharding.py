@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[str, Tuple[str, ...], None]

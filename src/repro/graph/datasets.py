@@ -15,9 +15,9 @@ statistics because this environment has no network access:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict
+from typing import Dict
 
-from .generators import power_law, rmat, uniform_random
+from .generators import power_law, rmat
 from .storage import GraphData
 
 

@@ -17,7 +17,7 @@ This is the memory layout layer of the back-end framework (paper Fig. 4):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import cached_property
 from typing import Optional, Tuple
 

@@ -7,7 +7,6 @@ contracts (tile multiples, sorted streams).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

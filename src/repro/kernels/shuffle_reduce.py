@@ -24,7 +24,6 @@ Validated against ``ref.shuffle_reduce_ref`` in interpret mode (CPU).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

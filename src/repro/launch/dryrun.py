@@ -29,7 +29,6 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
 """
 import argparse
-import dataclasses
 import json
 import re
 import time
@@ -39,7 +38,6 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, SHAPES, get_config, shape_supported
 from ..configs.base import ArchConfig, ShapeSpec
@@ -291,6 +289,8 @@ def run_cell(
                 compiled = lowered.compile()
                 mem = compiled.memory_analysis()
                 cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):  # newer jax: per-computation list
+                    cost = cost[0] if cost else None
                 mem_d = {}
                 for k in ("argument_size_in_bytes", "output_size_in_bytes",
                           "temp_size_in_bytes", "generated_code_size_in_bytes",
@@ -320,6 +320,8 @@ def run_cell(
                                   out_shardings=out_sh)
                     compiled = jfn.lower(*sds).compile()
                     cost = compiled.cost_analysis() or {}
+                    if isinstance(cost, (list, tuple)):  # newer jax: per-computation list
+                        cost = cost[0] if cost else {}
                     coll = parse_collectives(compiled.as_text())
                     costs.append({
                         "units": units,

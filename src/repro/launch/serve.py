@@ -1,8 +1,13 @@
-"""Serving driver: batched prefill + decode with a KV cache.
+"""Serving driver: LM decode serving and graph-query serving.
 
-CPU smoke example:
+LM path — batched prefill + decode with a KV cache. CPU smoke example:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 16 --gen-len 16
+
+Graph path — one compiled Program bound to one graph, many parameterized
+queries served through a SessionPool (compile once, bind once, answer N):
+    PYTHONPATH=src python -m repro.launch.serve --graph bfs \
+        --queries 32 --pool 4
 """
 from __future__ import annotations
 
@@ -40,6 +45,58 @@ def generate(model: Model, params, prompts: jnp.ndarray, gen_len: int,
     return jnp.concatenate(out, axis=1)
 
 
+GRAPH_ALGOS = ("bfs", "pagerank", "sssp")
+
+
+def serve_graph(args) -> int:
+    """Serve a batch of graph queries: compile once, bind once, run many.
+
+    This is the Program/Session serving path: the DSL program is compiled
+    to one artifact, bound to one resident graph, and every query is a
+    ``session.run(**params)`` with explicit parameters — no per-query
+    recompilation, no host_env mutation.
+    """
+    from ..algorithms import sources
+    from ..core.program import compile_program
+    from ..graph import generators
+
+    src = {
+        "bfs": sources.BFS_ECP,
+        "pagerank": sources.PAGERANK,
+        "sssp": sources.SSSP,
+    }[args.graph]
+    result_prop = {"bfs": "old_level", "pagerank": "rank", "sssp": "SP"}[args.graph]
+    weighted = args.graph == "sssp"
+    graph = generators.power_law(
+        args.vertices, args.edges, seed=args.seed, weighted=weighted
+    )
+    program = compile_program(src)
+    rng = np.random.default_rng(args.seed)
+    if args.graph == "pagerank":
+        queries = [{"iters": int(i)} for i in rng.integers(5, 25, args.queries)]
+    else:
+        roots = rng.integers(0, graph.n_vertices, args.queries)
+        queries = [{"root": int(r)} for r in roots]
+
+    print(f"serving {args.queries} {args.graph} queries on |V|={graph.n_vertices} "
+          f"|E|={graph.n_edges} via {args.pool} sessions ({args.backend} backend)")
+    with program.pool(graph, size=args.pool, backend=args.backend) as pool:
+        t_warm = time.perf_counter()
+        pool.warmup(**queries[0])  # every worker jit-compiles its kernels
+        warm_s = time.perf_counter() - t_warm
+        t0 = time.perf_counter()
+        results = pool.run_batch(queries)
+        dt = time.perf_counter() - t0
+    assert len(results) == len(queries)
+    total_iters = sum(r.stats.host_iterations for r in results)
+    sample = np.asarray(results[0].properties[result_prop])
+    print(f"answered {len(results)} queries in {dt:.3f}s "
+          f"({len(results) / dt:.1f} qps, {total_iters} host iterations total)")
+    print(f"first result ({result_prop}): min={sample.min():.4g} "
+          f"max={sample.max():.4g} warmup={warm_s:.3f}s for {args.pool} workers")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-0.6b")
@@ -48,7 +105,18 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    # graph-query serving (Program/SessionPool path)
+    ap.add_argument("--graph", choices=GRAPH_ALGOS, default=None,
+                    help="serve graph queries for this algorithm instead of LM decode")
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--pool", type=int, default=2)
+    ap.add_argument("--vertices", type=int, default=2000)
+    ap.add_argument("--edges", type=int, default=16000)
+    ap.add_argument("--backend", choices=("local", "distributed"), default="local")
     args = ap.parse_args(argv)
+
+    if args.graph is not None:
+        return serve_graph(args)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.has_decoder:

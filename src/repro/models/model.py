@@ -21,9 +21,8 @@ The public surface:
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,6 @@ from .layers import (
     mlp_apply,
     mlp_init,
     rmsnorm,
-    rmsnorm_init,
     shd,
     softmax_xent,
 )

@@ -8,7 +8,7 @@ memory C [Dh, Dh] and normalizer n [Dh]. sLSTM is a true scalar recurrence
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,7 @@ n_microbatches, the standard large-model configuration).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,46 @@
+"""Soft dependency gate for `hypothesis`.
+
+When hypothesis is installed, this module re-exports the real API. When it
+is missing (the CI base image does not bake it in), `@given` tests become
+individual skips while every other test in the importing module still
+collects and runs — instead of the whole file dying at import time.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            # deliberately NOT functools.wraps: the replacement must keep
+            # its own (*a, **k) signature so pytest doesn't try to resolve
+            # the strategy-bound parameters as fixtures
+            def skipper(*a, **k):
+                pytest.skip("hypothesis is not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call (st.integers(...), ...)."""
+
+        def __getattr__(self, name):
+            def strategy(*_a, **_k):
+                return None
+
+            return strategy
+
+    strategies = _AnyStrategy()

@@ -1,7 +1,4 @@
 """Checkpoint manager: atomicity, integrity, resume, elastic re-shard."""
-import json
-import os
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -1,9 +1,9 @@
 """Graph substrate property tests (storage, partitioning, generators)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
-from repro.graph import GraphData, generators
+from repro.graph import generators
 from repro.graph.datasets import TABLE_II, make_dataset
 
 

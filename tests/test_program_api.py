@@ -1,0 +1,274 @@
+"""Program/Session API tests: compile-once caching, parameter validation,
+one-program-many-graphs reuse, SessionPool batch serving, and local vs
+distributed backend equivalence."""
+import gc
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import CompileOptions
+from repro.core.program import (
+    ProgramError,
+    clear_program_cache,
+    program_cache_size,
+)
+from repro.core.session import SessionError, SessionPool
+from repro.algorithms import sources
+from repro.graph import generators
+
+
+def _counting_src(delta: str) -> str:
+    """A tiny degree-counting program; `delta` parameterizes the content."""
+    return f"""
+element Vertex end
+element Edge end
+const edges: edgeset{{Edge}}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{{Vertex}} = edges.getVertices();
+const acc: vector{{Vertex}}(int);
+func initz(v: Vertex)
+    acc[v] = 0;
+end
+func count(src: Vertex, dst: Vertex)
+    acc[dst] += {delta};
+end
+func main()
+    vertices.init(initz);
+    edges.process(count);
+end
+"""
+
+
+REQUIRED_PARAM_SRC = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const mark: vector{Vertex}(int);
+const root: int;
+func initz(v: Vertex)
+    mark[v] = 0;
+end
+func main()
+    vertices.init(initz);
+    mark[root] = 1;
+end
+"""
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.power_law(300, 2000, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# Program cache
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cached_on_content():
+    clear_program_cache()
+    src = _counting_src("1")
+    p1 = repro.compile(src)
+    # a *distinct string object* with equal content hits the same artifact
+    p2 = repro.compile("".join(list(src)))
+    assert p1 is p2
+    assert program_cache_size() == 1
+
+
+def test_compile_recompiles_on_different_options():
+    src = _counting_src("1")
+    p_full = repro.compile(src, CompileOptions.full())
+    p_base = repro.compile(src, CompileOptions.baseline())
+    assert p_full is not p_base
+    assert p_full.options != p_base.options
+
+
+def test_program_cache_immune_to_id_reuse(graph):
+    """Regression for the old id(src)-keyed module cache: after a source
+    string is GC'd, CPython may hand its id to an unrelated string, which
+    used to alias the two programs. Content-hash keying cannot collide."""
+    clear_program_cache()
+    ids_seen = []
+    for delta in ("1", "2", "3", "1", "2"):
+        src = _counting_src(delta)
+        ids_seen.append(id(src))
+        prog = repro.compile(src)
+        res = prog.bind(graph).run()
+        np.testing.assert_array_equal(
+            res.properties["acc"], graph.in_degree * int(delta)
+        )
+        del src, prog, res
+        gc.collect()  # invite id reuse between iterations
+    # three distinct programs live in the cache, never cross-contaminated
+    assert program_cache_size() == 3
+
+
+# ---------------------------------------------------------------------------
+# parameter validation
+# ---------------------------------------------------------------------------
+
+
+def test_declared_params_extracted():
+    prog = repro.compile(sources.PAGERANK)
+    assert set(prog.params) == {"damp", "iters"}
+    assert not any(p.required for p in prog.params.values())
+
+
+def test_unknown_param_raises(graph):
+    sess = repro.compile(sources.PAGERANK).bind(graph)
+    with pytest.raises(ProgramError, match=r"unknown run-time parameter.*bogus"):
+        sess.run(bogus=3)
+
+
+def test_param_type_mismatch_raises(graph):
+    sess = repro.compile(sources.PAGERANK).bind(graph)
+    with pytest.raises(ProgramError, match=r"'iters' expects int"):
+        sess.run(iters="twenty")
+    with pytest.raises(ProgramError, match=r"'iters' expects int"):
+        sess.run(iters=2.5)
+    # integral floats and numpy ints coerce cleanly
+    sess.run(iters=np.int64(2))
+    sess.run(iters=3.0)
+
+
+def test_missing_required_param_raises(graph):
+    prog = repro.compile(REQUIRED_PARAM_SRC)
+    assert prog.params["root"].required
+    sess = prog.bind(graph)
+    with pytest.raises(ProgramError, match=r"missing required parameter 'root'"):
+        sess.run()
+    res = sess.run(root=5)
+    assert res.properties["mark"][5] == 1
+    assert res.properties["mark"].sum() == 1
+
+
+def test_unknown_backend_raises(graph):
+    prog = repro.compile(sources.PAGERANK)
+    with pytest.raises(SessionError, match="unknown backend"):
+        prog.bind(graph, backend="fpga")
+
+
+# ---------------------------------------------------------------------------
+# bind-many / run-many
+# ---------------------------------------------------------------------------
+
+
+def test_one_program_many_graphs():
+    prog = repro.compile(_counting_src("1"))
+    for seed, (v, e) in ((0, (50, 300)), (1, (200, 1500))):
+        g = generators.power_law(v, e, seed=seed)
+        res = prog.bind(g).run()
+        np.testing.assert_array_equal(res.properties["acc"], g.in_degree)
+
+
+def test_session_reuse_resets_state(graph):
+    sess = repro.compile(sources.BFS_ECP, CompileOptions.full()).bind(graph)
+    l0 = sess.run(root=0).properties["old_level"]
+    l7 = sess.run(root=7).properties["old_level"]
+    l0_again = sess.run(root=0).properties["old_level"]
+    np.testing.assert_array_equal(l0, l0_again)
+    assert not np.array_equal(l0, l7)
+    assert sess.runs == 3
+
+
+def test_deprecated_shims_still_work(graph):
+    from repro.core import compile_source, run_source
+
+    module = compile_source(_counting_src("1"))
+    assert "count" in module.kernels
+    res = run_source(_counting_src("1"), graph)
+    np.testing.assert_array_equal(res.properties["acc"], graph.in_degree)
+
+
+# ---------------------------------------------------------------------------
+# SessionPool
+# ---------------------------------------------------------------------------
+
+
+def test_session_pool_batch_order(graph):
+    prog = repro.compile(sources.BFS_ECP, CompileOptions.full())
+    roots = [0, 3, 9, 0, 42, 7]
+    with prog.pool(graph, size=3) as pool:
+        results = pool.run_batch([{"root": r} for r in roots])
+    assert len(results) == len(roots)
+    # results arrive in submission order: each matches a solo session run
+    solo = prog.bind(graph)
+    for root, res in zip(roots, results):
+        want = solo.run(root=root).properties["old_level"]
+        np.testing.assert_array_equal(res.properties["old_level"], want)
+
+
+def test_session_pool_submit_async(graph):
+    prog = repro.compile(sources.PAGERANK)
+    with SessionPool(prog, graph, size=2) as pool:
+        futs = [pool.submit(iters=i) for i in (1, 5)]
+        r1, r5 = [f.result() for f in futs]
+    assert r1.stats.host_iterations == 1
+    assert r5.stats.host_iterations == 5
+    with pytest.raises(ProgramError):
+        # validation fails fast on the caller thread, even when closed-over
+        SessionPool(prog, graph, size=1).submit(nope=1)
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence (acceptance: BFS + PageRank, local == distributed)
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_local_vs_distributed(graph):
+    prog = repro.compile(sources.BFS_ECP, CompileOptions.full())
+    root = int(np.argmax(graph.out_degree))
+    r_local = prog.bind(graph, backend="local").run(root=root)
+    r_dist = prog.bind(graph, backend="distributed").run(root=root)
+    np.testing.assert_array_equal(
+        r_local.properties["old_level"], r_dist.properties["old_level"]
+    )
+    assert r_dist.stats.dist_supersteps > 0, "edge kernel never distributed"
+
+
+def test_pagerank_local_vs_distributed(graph):
+    prog = repro.compile(sources.PAGERANK)
+    r_local = prog.bind(graph, backend="local").run(iters=20)
+    r_dist = prog.bind(graph, backend="distributed").run(iters=20)
+    np.testing.assert_allclose(
+        r_local.properties["rank"], r_dist.properties["rank"], rtol=1e-5
+    )
+    assert r_dist.stats.dist_supersteps == 20
+
+
+def test_sssp_distributed_fallback_correct():
+    g = generators.power_law(200, 1400, seed=3, weighted=True)
+    prog = repro.compile(sources.SSSP, CompileOptions.full())
+    r_local = prog.bind(g, backend="local").run(root=0)
+    r_dist = prog.bind(g, backend="distributed").run(root=0)
+    np.testing.assert_array_equal(r_local.properties["SP"], r_dist.properties["SP"])
+
+
+def test_distributed_8dev_matches_local(subproc):
+    """The real thing: 8 emulated devices, shard_map + all_to_all."""
+    out = subproc(
+        """
+import numpy as np
+import repro
+from repro.algorithms import sources
+from repro.graph import generators
+
+g = generators.power_law(600, 5000, seed=11)
+root = int(np.argmax(g.out_degree))
+bfs = repro.compile(sources.BFS_ECP, repro.CompileOptions.full())
+l_bfs = bfs.bind(g, backend="local").run(root=root)
+d_bfs = bfs.bind(g, backend="distributed").run(root=root)
+np.testing.assert_array_equal(l_bfs.properties["old_level"],
+                              d_bfs.properties["old_level"])
+assert d_bfs.stats.dist_supersteps > 0
+
+pr = repro.compile(sources.PAGERANK)
+l_pr = pr.bind(g, backend="local").run(iters=15)
+d_pr = pr.bind(g, backend="distributed").run(iters=15)
+np.testing.assert_allclose(l_pr.properties["rank"], d_pr.properties["rank"],
+                           rtol=1e-5)
+print("8dev backends agree")
+"""
+    )
+    assert "8dev backends agree" in out

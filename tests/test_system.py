@@ -2,7 +2,6 @@
 accelerator program -> results, plus engine-level invariants the paper's
 system guarantees."""
 import numpy as np
-import pytest
 
 from repro.core import CompileOptions, Engine, compile_source, run_source
 from repro.graph import generators
@@ -49,14 +48,12 @@ def test_engine_reuse_and_stats():
 def test_hybrid_direction_switching_actually_switches():
     """Fig. 2: the engine must launch BOTH VCP and ECP kernels when the
     frontier crosses the 5% threshold."""
+    import repro
     from repro.algorithms import sources
-    from repro.graph.datasets import make_dataset
 
     g = generators.power_law(2000, 30000, seed=2)
-    module = compile_source(sources.BFS_HYBRID)
-    eng = Engine(module, g, CompileOptions.full())
-    eng.host_env["root"] = int(np.argmax(g.out_degree))  # reachable frontier
-    res = eng.run()
+    session = repro.compile(sources.BFS_HYBRID, CompileOptions.full()).bind(g)
+    res = session.run(root=int(np.argmax(g.out_degree)))  # reachable frontier
     launches = res.stats.kernel_launches
     assert launches.get("VertexTraversal", 0) > 0, "VCP never used"
     assert launches.get("EdgeTraversal", 0) > 0, "ECP never used"
