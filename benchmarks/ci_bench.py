@@ -1,0 +1,199 @@
+"""CI perf-regression gate: quick BFS + PageRank benchmark on small
+synthetic graphs.
+
+Two modes:
+
+* measure (default): runs the benchmark subset and writes ``BENCH_ci.json``
+  with, per workload, the cold compile+first-run wall time, the steady-state
+  (warm session) wall time, and the kernel-launch reduction achieved by the
+  MIR pass pipeline (passes on vs off).
+
+* ``--check``: compares a freshly written ``BENCH_ci.json`` against the
+  committed ``BENCH_baseline.json`` and exits non-zero when any workload's
+  compile+run or steady-state wall time regressed by more than
+  ``--threshold`` (default 1.5x), or when the pass pipeline's launch
+  reduction fell below the acceptance floor of 1.3x.
+
+Wall-time comparisons are only meaningful between similar machines, so
+the gate self-arms: while the committed baseline's ``meta.source`` is
+"local" (measured on a dev machine) wall-time regressions are reported as
+advisory warnings; once a baseline produced by a CI run (``meta.source ==
+"ci"`` — download the ``bench-ci`` artifact of a green run and commit it)
+is in place, they become fatal. A sub-50ms absolute delta is always
+treated as runner jitter. The launch-reduction floor is
+machine-independent and enforced unconditionally.
+
+Refreshing the baseline after an intentional perf change::
+
+    PYTHONPATH=src python -m benchmarks.ci_bench --out BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+from dataclasses import replace
+
+LAUNCH_REDUCTION_FLOOR = 1.3
+
+
+def _workloads():
+    import numpy as np
+
+    from repro.algorithms import sources
+    from repro.graph import generators
+
+    g_bfs = generators.power_law(2000, 16000, seed=0)
+    g_pr = generators.power_law(2000, 16000, seed=1)
+    return {
+        "bfs": (sources.BFS_ECP, g_bfs, {"root": int(np.argmax(g_bfs.out_degree))}),
+        "pagerank": (sources.PAGERANK, g_pr, {"iters": 10}),
+    }
+
+
+def _time_workload(src, graph, params, options):
+    """(cold compile+bind+first-run seconds, warm best-of-3 seconds, stats)."""
+    import repro
+    from repro.core.program import clear_program_cache
+
+    clear_program_cache()
+    t0 = time.perf_counter()
+    session = repro.compile(src, options).bind(graph)
+    res = session.run(**params)
+    compile_run_s = time.perf_counter() - t0
+
+    steady = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = session.run(**params)
+        steady = min(steady, time.perf_counter() - t0)
+    return compile_run_s, steady, res.stats
+
+
+def measure() -> dict:
+    from repro.core import CompileOptions
+
+    opts_on = CompileOptions.full()
+    opts_off = replace(opts_on, passes="none")
+    out = {
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            # wall times only gate hard against a baseline measured on the
+            # same runner class; "local" baselines make them advisory
+            "source": "ci" if os.environ.get("GITHUB_ACTIONS") else "local",
+        },
+        "workloads": {},
+    }
+    for name, (src, graph, params) in _workloads().items():
+        compile_run_s, steady_s, stats_on = _time_workload(src, graph, params, opts_on)
+        _, _, stats_off = _time_workload(src, graph, params, opts_off)
+        launches_on = stats_on.total_launches
+        launches_off = stats_off.total_launches
+        out["workloads"][name] = {
+            "compile_run_s": round(compile_run_s, 4),
+            "steady_s": round(steady_s, 4),
+            "launches_passes_on": launches_on,
+            "launches_passes_off": launches_off,
+            "launch_reduction": round(launches_off / max(launches_on, 1), 3),
+            "fused_launches": stats_on.fused_launches,
+        }
+    return out
+
+
+# a wall-time "regression" below this absolute delta is runner jitter, not
+# a signal — millisecond-scale steady-state times on shared CI runners can
+# easily move 1.5x without any code change
+MIN_REGRESSION_DELTA_S = 0.05
+
+
+def check(ci: dict, baseline: dict, threshold: float) -> int:
+    failures = []
+    base_wl = baseline.get("workloads", {})
+    ci_wl = ci.get("workloads", {})
+    # absolute wall times are only comparable within one runner class: a
+    # baseline not measured on CI (source != "ci") arms the wall-time gate
+    # in advisory mode — regressions are reported but non-fatal — until a
+    # CI-produced bench-ci artifact replaces the committed baseline; the
+    # machine-independent launch-reduction floor is always fatal
+    walltime_fatal = baseline.get("meta", {}).get("source") == "ci"
+    warnings = []
+    # every measured workload must be gated: a workload added to
+    # _workloads() without refreshing the committed baseline fails loudly
+    # instead of silently shipping ungated
+    for name in sorted(set(ci_wl) - set(base_wl)):
+        failures.append(
+            f"{name}: measured but absent from the baseline — refresh "
+            f"BENCH_baseline.json to gate it"
+        )
+    for name, base in base_wl.items():
+        got = ci_wl.get(name)
+        if got is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        for key in ("compile_run_s", "steady_s"):
+            if key not in got or key not in base:
+                failures.append(f"{name}.{key}: metric missing "
+                                f"(ci={key in got}, baseline={key in base})")
+                continue
+            ratio = got[key] / max(base[key], 1e-9)
+            delta = got[key] - base[key]
+            line = (f"{name}.{key}: {got[key]:.4f}s vs baseline "
+                    f"{base[key]:.4f}s ({ratio:.2f}x)")
+            if ratio > threshold and delta > MIN_REGRESSION_DELTA_S:
+                if walltime_fatal:
+                    failures.append(f"REGRESSION {line} > {threshold}x")
+                else:
+                    warnings.append(
+                        f"WARNING {line} > {threshold}x (advisory: baseline "
+                        f"was not measured on a CI runner)"
+                    )
+            else:
+                print(f"ok   {line}")
+        lr = got.get("launch_reduction", 0.0)
+        if lr < LAUNCH_REDUCTION_FLOOR:
+            failures.append(
+                f"REGRESSION {name}.launch_reduction: {lr:.2f}x < "
+                f"{LAUNCH_REDUCTION_FLOOR}x acceptance floor"
+            )
+        else:
+            print(f"ok   {name}.launch_reduction: {lr:.2f}x "
+                  f"(floor {LAUNCH_REDUCTION_FLOOR}x)")
+    for w in warnings:
+        print(w)
+    for f in failures:
+        print(f, file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_ci.json", help="measurement output path")
+    ap.add_argument("--check", action="store_true",
+                    help="compare --ci against --baseline instead of measuring")
+    ap.add_argument("--ci", default="BENCH_ci.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed wall-time regression ratio")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        with open(args.ci) as f:
+            ci = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        return check(ci, baseline, args.threshold)
+
+    results = measure()
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(results, indent=2, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,14 @@
 """Paper Fig. 9: BFS speedups with individual memory-access optimizations
 (burst-only / cache-only / shuffle-only) vs the full composition.
-Warm-engine timing (see fig8)."""
+Warm-engine timing (see fig8).
+
+Beyond-paper axis: ``fullNoPasses`` runs the full memory-optimization
+composition with the MIR optimization pass pipeline disabled
+(``CompileOptions.passes="none"``), isolating the contribution of kernel
+fusion / direction selection from the memory-access optimizations."""
 from __future__ import annotations
+
+from dataclasses import replace
 
 import numpy as np
 
@@ -17,6 +24,7 @@ VARIANTS = {
     "withBurst": CompileOptions.with_only("burst"),
     "withCache": CompileOptions.with_only("cache"),
     "withShuffle": CompileOptions.with_only("shuffle"),
+    "fullNoPasses": replace(CompileOptions.full(), passes="none"),
     "full": CompileOptions.full(),
 }
 
@@ -39,7 +47,9 @@ def main(scale: float = DEFAULT_SCALE, datasets=None) -> list:
                     t * 1e6,
                     f"cpu_speedup={t_base / t:.2f}x;"
                     f"work_reduction={e_base / max(res.stats.edges_traversed, 1):.2f}x;"
-                    f"edges={res.stats.edges_traversed}",
+                    f"edges={res.stats.edges_traversed};"
+                    f"launches={res.stats.total_launches};"
+                    f"fused={res.stats.fused_launches}",
                 )
             )
     return lines

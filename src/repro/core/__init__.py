@@ -26,6 +26,7 @@ remain as deprecated shims for older callers.
 from .engine import Engine, EngineResult, compile_source, run_source
 from .options import CompileOptions
 from .parser import parse
+from .passes import PassError, DEFAULT_PASSES
 from .program import (
     ParamSpec,
     Program,
@@ -47,6 +48,8 @@ __all__ = [
     "Engine",
     "EngineResult",
     "CompileOptions",
+    "PassError",
+    "DEFAULT_PASSES",
     "Program",
     "ProgramError",
     "ParamSpec",

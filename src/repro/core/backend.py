@@ -109,7 +109,9 @@ def apply_scatter(
     if options.pallas:
         from ..kernels import ops as kops
 
-        reduced = kops.shuffle_reduce(vals, idx, n, op, interpret=options.interpret)
+        reduced = kops.shuffle_reduce(
+            vals, idx, n, op, interpret=options.interpret_effective
+        )
         return combine(op, prop_arr, reduced)
     if options.shuffle and sort_perm is not None:
         # conflict-free path: precomputed routing (sort) + segment reduce
@@ -547,30 +549,85 @@ def _graph_bindings(
     return gb
 
 
+def _exec_kernel_full(
+    module: mir.Module,
+    kernel: mir.Kernel,
+    options: CompileOptions,
+    gb: Dict[str, Any],
+    state: Dict[str, jnp.ndarray],
+    scalars: Dict[str, jnp.ndarray],
+) -> Dict[str, jnp.ndarray]:
+    """Trace one full-stream kernel execution: lanes -> body -> commit.
+
+    Shared between the per-kernel ``run_full`` lowering and the fused
+    pipeline lowering (which chains several of these inside ONE jit, each
+    stage seeing the previous stage's committed updates)."""
+    ex = KernelExec(module, kernel, options, state, scalars, gb)
+    if kernel.kind is mir.KernelKind.EDGE:
+        n = gb["src"].shape[0]
+        bindings = {kernel.src_param: gb["src"], kernel.dst_param: gb["dst"],
+                    "edge": gb["order"]}
+        if kernel.weight_param is not None:
+            bindings[kernel.weight_param] = state[WEIGHT_KEY][gb["order"]]
+        lane = LaneCtx(n_lanes=n, bindings=bindings, valid=None)
+        ex.exec_block(kernel.func.body, lane, None)
+        out = ex.commit()
+        if WEIGHT_KEY in out:
+            # processing-order weights -> original edge order
+            out[WEIGHT_KEY] = state[WEIGHT_KEY].at[gb["order"]].set(out[WEIGHT_KEY])
+        return out
+    n = gb["n_vertices"]
+    lane = LaneCtx(
+        n_lanes=n,
+        bindings={kernel.vertex_param: jnp.arange(n, dtype=jnp.int32)},
+        valid=None,
+    )
+    ex.exec_block(kernel.func.body, lane, None)
+    return ex.commit()
+
+
+def lower_pipeline(
+    module: mir.Module,
+    pipeline: mir.PipelineKernel,
+    gb: Dict[str, Any],
+    options: CompileOptions,
+) -> LoweredKernel:
+    """Lower a fused multi-stage launch (paper Fig. 4 single pipeline).
+
+    All stages trace into ONE jitted executable. Stage boundaries keep
+    launch semantics: each stage's updates (including scattered reduces)
+    are committed into the running state before the next stage traces, so
+    results are identical to launching the stages separately — minus the
+    per-launch dispatch/transfer overhead."""
+    stages = list(pipeline.stages)
+
+    def run_full(state, scalars):
+        cur = dict(state)
+        out: Dict[str, jnp.ndarray] = {}
+        for stage in stages:
+            upd = _exec_kernel_full(module, stage, options, gb, cur, scalars)
+            cur.update(upd)
+            out.update(upd)
+        return out
+
+    return LoweredKernel(
+        pipeline.name, mir.KernelKind.PIPELINE, run_full=jax.jit(run_full)
+    )
+
+
 def lower_kernel(
     module: mir.Module,
     kernel: mir.Kernel,
     gb: Dict[str, Any],
     options: CompileOptions,
 ) -> LoweredKernel:
-    weighted = module.graph.weighted
+    if isinstance(kernel, mir.PipelineKernel):
+        return lower_pipeline(module, kernel, gb, options)
 
     if kernel.kind is mir.KernelKind.EDGE:
 
         def run_full(state, scalars):
-            ex = KernelExec(module, kernel, options, state, scalars, gb)
-            n = gb["src"].shape[0]
-            bindings = {kernel.src_param: gb["src"], kernel.dst_param: gb["dst"],
-                        "edge": gb["order"]}
-            if kernel.weight_param is not None:
-                bindings[kernel.weight_param] = state[WEIGHT_KEY][gb["order"]]
-            lane = LaneCtx(n_lanes=n, bindings=bindings, valid=None)
-            ex.exec_block(kernel.func.body, lane, None)
-            out = ex.commit()
-            if WEIGHT_KEY in out:
-                # processing-order weights -> original edge order
-                out[WEIGHT_KEY] = state[WEIGHT_KEY].at[gb["order"]].set(out[WEIGHT_KEY])
-            return out
+            return _exec_kernel_full(module, kernel, options, gb, state, scalars)
 
         def run_subset(state, scalars, batch):
             src, dst, w, eid, valid = batch
@@ -598,15 +655,7 @@ def lower_kernel(
 
     # vertex kernel
     def run_full(state, scalars):
-        ex = KernelExec(module, kernel, options, state, scalars, gb)
-        n = gb["n_vertices"]
-        lane = LaneCtx(
-            n_lanes=n,
-            bindings={kernel.vertex_param: jnp.arange(n, dtype=jnp.int32)},
-            valid=None,
-        )
-        ex.exec_block(kernel.func.body, lane, None)
-        return ex.commit()
+        return _exec_kernel_full(module, kernel, options, gb, state, scalars)
 
     def run_subset(state, scalars, batch):
         vids, valid = batch

@@ -404,24 +404,41 @@ class DistEngine(Engine):
         self._dist_lowered[name] = entry
         return entry
 
+    # -- superstep execution -------------------------------------------------
+    def _dist_exec(self, name: str, entry: tuple):
+        """Run one distributed superstep for an already-lowered edge kernel."""
+        step, out_prop, op, src_props = entry
+        scalars = self._kernel_scalars(name)
+        props = {p: self.state[p] for p in src_props}
+        red = step(props, scalars)[: self.graph.n_vertices]
+        cur = self.state[out_prop]
+        self.state[out_prop] = backend.combine(op, cur, red.astype(cur.dtype))
+        self.stats.dist_supersteps += 1
+        self.stats.edges_traversed += self.graph.n_edges
+
     # -- launch override -----------------------------------------------------
     def launch(self, name: str):
         kern = self.module.kernels.get(name)
-        if kern is not None and kern.kind is mir.KernelKind.EDGE:
+        if isinstance(kern, mir.PipelineKernel):
+            # consume a fused pipeline stage-by-stage whenever an edge stage
+            # can run as a distributed superstep (stage kernels keep their
+            # own entries in module.kernels, so per-stage lowering caches
+            # under the original names); otherwise fall through to the
+            # single-jit local pipeline lowering
+            entries = {s.name: self._dist_kernel(s.name) for s in kern.edge_stages}
+            if any(e is not None for e in entries.values()):
+                self._count_launch(name, kern)
+                for stage in kern.stages:
+                    entry = entries.get(stage.name)
+                    if entry is not None:
+                        self._dist_exec(stage.name, entry)
+                    else:
+                        self._execute_kernel(stage.name, stage)
+                return
+        elif kern is not None and kern.kind is mir.KernelKind.EDGE:
             entry = self._dist_kernel(name)
             if entry is not None:
-                step, out_prop, op, src_props = entry
-                scalars = self._kernel_scalars(name)
-                props = {p: self.state[p] for p in src_props}
-                red = step(props, scalars)[: self.graph.n_vertices]
-                cur = self.state[out_prop]
-                self.state[out_prop] = backend.combine(
-                    op, cur, red.astype(cur.dtype)
-                )
-                self.stats.kernel_launches[name] = (
-                    self.stats.kernel_launches.get(name, 0) + 1
-                )
-                self.stats.dist_supersteps += 1
-                self.stats.edges_traversed += self.graph.n_edges
+                self._count_launch(name, kern)
+                self._dist_exec(name, entry)
                 return
         super().launch(name)

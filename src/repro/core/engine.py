@@ -49,6 +49,14 @@ class EngineStats:
     edges_traversed: int = 0
     host_iterations: int = 0
     wall_time_s: float = 0.0
+    # kernel-fusion accounting (the `fuse` MIR pass): how many launches hit
+    # a fused kernel, and how many separate launches fusion saved overall
+    fused_launches: int = 0
+    launches_saved: int = 0
+
+    @property
+    def total_launches(self) -> int:
+        return sum(self.kernel_launches.values())
 
 
 @dataclass
@@ -168,14 +176,29 @@ class Engine:
         return out
 
     def launch(self, name: str):
+        kern = self.module.kernels.get(name)
+        if kern is None:
+            raise EngineError(f"{name!r} is not a device kernel")
+        self._count_launch(name, kern)
+        self._execute_kernel(name, kern)
+
+    def _count_launch(self, name: str, kern):
+        """One logical launch (a fused kernel counts once, not per stage)."""
+        self.stats.kernel_launches[name] = self.stats.kernel_launches.get(name, 0) + 1
+        parts = self.module.fusion_groups.get(name)
+        if parts:
+            self.stats.fused_launches += 1
+            self.stats.launches_saved += len(parts) - 1
+
+    def _execute_kernel(self, name: str, kern):
         lk = self._kernel(name)
         scalars = self._kernel_scalars(name)
-        self.stats.kernel_launches[name] = self.stats.kernel_launches.get(name, 0) + 1
-
-        kern = self.module.kernels[name]
         if (
             self.options.compact_frontier
             and kern.kind is mir.KernelKind.EDGE
+            # DENSE = compile-time verdict that the guard is loop-invariant:
+            # skip host-side frontier mask evaluation entirely
+            and kern.direction is not mir.Direction.DENSE
             and lk.frontier is not None
             and lk.run_subset is not None
         ):
@@ -185,6 +208,8 @@ class Engine:
         self.stats.full_launches += 1
         if kern.kind is mir.KernelKind.EDGE:
             self.stats.edges_traversed += self.graph.n_edges
+        elif isinstance(kern, mir.PipelineKernel):
+            self.stats.edges_traversed += self.graph.n_edges * len(kern.edge_stages)
         updates = lk.run_full(self.state, scalars)
         self.state.update(updates)
 

@@ -25,6 +25,28 @@ class KernelKind(enum.Enum):
     VERTEX = "vertex"  # func f(v: Vertex)
     EDGE = "edge"  # func f(src: Vertex, dst: Vertex[, w: int|float])
     HOST = "host"  # zero-parameter functions (incl. main)
+    PIPELINE = "pipeline"  # fused multi-stage launch (created by passes.py)
+
+
+class Direction(enum.Enum):
+    """Compile-time traversal-direction decision for an edge kernel.
+
+    The paper's direction optimization (Fig. 2) is a runtime heuristic in
+    the engine; the ``direction`` pass replaces it with a per-kernel
+    compile-time verdict derived from frontier information:
+
+    * ``DENSE``  — the frontier condition is loop-invariant (e.g. the
+      ``deg[src] > 0`` guard of PageRank) or absent: always stream the full
+      edge list, never evaluate a host-side frontier mask.
+    * ``SPARSE`` — the frontier props are mutated between launches (a real
+      shrinking/growing frontier, e.g. BFS levels): always attempt frontier
+      compaction, with the edge-count threshold kept as the switch-back.
+    * ``AUTO``   — no pass ran; the engine keeps its runtime-only fallback.
+    """
+
+    AUTO = "auto"
+    DENSE = "dense"
+    SPARSE = "sparse"
 
 
 class IndexPattern(enum.Enum):
@@ -98,6 +120,8 @@ class Kernel:
     has_neighbor_loop: bool = False
     writes_weight: bool = False
     accumulators: Set[str] = field(default_factory=set)  # props written at const index
+    # compile-time push/pull decision (assigned by the `direction` pass)
+    direction: Direction = Direction.AUTO
 
     @property
     def scatter_props(self) -> Set[str]:
@@ -116,6 +140,57 @@ class Kernel:
             for w in self.writes
             if w.pattern in (IndexPattern.SELF, IndexPattern.SRC)
         }
+
+
+@dataclass
+class PipelineKernel:
+    """A fused multi-stage launch: the paper's Fig. 4 single pipeline.
+
+    Created by the ``fuse`` pass when an edge kernel and the vertex apply
+    over its scatter target (or adjacent vertex kernels that cannot be
+    body-merged) are launched back to back with no intervening host
+    dependency. The back-end lowers all stages into ONE jitted executable;
+    each stage's scattered writes commit before the next stage runs, so
+    the result is bit-identical to the unfused launch sequence.
+
+    Stage kernels keep their own entries in ``Module.kernels`` (the host
+    program may still launch them individually elsewhere).
+    """
+
+    name: str
+    stages: List[Kernel] = field(default_factory=list)
+    kind: KernelKind = KernelKind.PIPELINE
+
+    # -- aggregate views so engines can treat this like a Kernel ----------
+    @property
+    def scalar_reads(self) -> Set[str]:
+        out: Set[str] = set()
+        for s in self.stages:
+            out |= s.scalar_reads
+        return out
+
+    @property
+    def accumulators(self) -> Set[str]:
+        out: Set[str] = set()
+        for s in self.stages:
+            out |= s.accumulators
+        return out
+
+    @property
+    def writes_weight(self) -> bool:
+        return any(s.writes_weight for s in self.stages)
+
+    @property
+    def has_neighbor_loop(self) -> bool:
+        return any(s.has_neighbor_loop for s in self.stages)
+
+    @property
+    def frontier(self) -> Optional[FrontierInfo]:
+        return None  # pipelines always run the full stream
+
+    @property
+    def edge_stages(self) -> List[Kernel]:
+        return [s for s in self.stages if s.kind is KernelKind.EDGE]
 
 
 @dataclass
@@ -153,9 +228,20 @@ class Module:
     memory: MemoryPlan = field(default_factory=MemoryPlan)
     # degree vectors requested via edges.getOutDegrees()/getInDegrees()
     degree_props: Dict[str, str] = field(default_factory=dict)  # prop -> 'out'|'in'
+    # optimization-pass bookkeeping (populated by passes.run_pipeline):
+    # fused launch name -> the original kernel names it replaces, in order
+    fusion_groups: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    # human-readable log of what each pass did (golden-tested via describe)
+    pass_report: List[str] = field(default_factory=list)
 
     def describe(self) -> str:
-        """Textual MIR dump — the analogue of the generated-OpenCL listing."""
+        """Textual MIR dump — the analogue of the generated-OpenCL listing.
+
+        When optimization passes ran (``CompileOptions.passes``), the dump
+        ends with one ``pass <name>: ...`` line per transformation applied,
+        so golden tests can pin exactly which kernels fused, which buffers
+        were eliminated, and which direction each edge kernel was assigned.
+        """
         lines = [f"graph {self.graph.edgeset_name} (weighted={self.graph.weighted})"]
         for p in self.properties.values():
             ln, dt, ch = self.memory.buffers[p.name]
@@ -163,6 +249,10 @@ class Module:
         for s in self.scalars.values():
             lines.append(f"  host scalar {s.name}: {s.scalar}")
         for k in self.kernels.values():
+            if isinstance(k, PipelineKernel):
+                stages = " -> ".join(s.name for s in k.stages)
+                lines.append(f"  kernel {k.name} [pipeline: {stages}]")
+                continue
             lines.append(f"  kernel {k.name} [{k.kind.value}]")
             for r in k.reads:
                 lines.append(f"    read  {r.prop}[{r.pattern.value}]")
@@ -175,4 +265,8 @@ class Module:
                 lines.append(f"    frontier-check on {sorted(k.frontier.props)}")
             if k.accumulators:
                 lines.append(f"    accumulators {sorted(k.accumulators)}")
+            if k.kind is KernelKind.EDGE and k.direction is not Direction.AUTO:
+                lines.append(f"    direction {k.direction.value}")
+        for entry in self.pass_report:
+            lines.append(f"  pass {entry}")
         return "\n".join(lines)

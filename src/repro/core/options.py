@@ -4,10 +4,31 @@ These mirror the ablation axes of paper Fig. 9 (Graphitron-withBurst /
 -withCache / -withShuffle vs full Graphitron) plus the TPU-kernel routing
 switch. ``CompileOptions.baseline()`` is the "handcrafted HLS without
 optimizations" reference configuration from the paper's evaluation.
+
+Two option groups interact with the compiler *middle-end* rather than the
+back-end:
+
+* ``passes`` selects the MIR optimization pass pipeline that runs between
+  semantic analysis and lowering (see :mod:`repro.core.passes`): kernel
+  fusion, dead-property elimination, host constant folding, and
+  compile-time push/pull direction selection. ``"default"`` runs all of
+  them in order; ``"none"`` disables the pipeline (the pre-pass 1:1
+  kernel-per-launch lowering); a comma list (``"fold,fuse"``) runs a
+  subset. Because ``CompileOptions`` is part of the Program cache key
+  (``repr(options)`` is hashed into the content fingerprint), the same
+  source compiled with different ``passes`` values yields distinct cached
+  Programs — pass ablations never alias.
+
+* ``scalar_bindings`` binds host scalars to values *at compile time*: the
+  ``fold`` pass substitutes them as literals into every kernel and host
+  expression (then simplifies), and the scalar disappears from the
+  program's declared run-time parameters. Use it to specialize a kernel on
+  a known-constant parameter (e.g. ``scalar_bindings=(("damp", 0.85),)``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -24,15 +45,35 @@ class CompileOptions:
     pallas: bool = False
     # dst-range partitions target (VMEM sizing unit); 0 = auto
     n_partitions: int = 0
-    # interpret=True for Pallas on CPU
-    interpret: bool = True
+    # Pallas interpret mode: None = auto (interpreted unless a real TPU
+    # backend is present), True/False = forced
+    interpret: Optional[bool] = None
+    # MIR optimization pass pipeline: "default" | "none" | "fuse,dce,..."
+    passes: str = "default"
+    # compile-time scalar bindings consumed by the `fold` pass
+    scalar_bindings: Tuple[Tuple[str, object], ...] = ()
+
+    @property
+    def interpret_effective(self) -> bool:
+        """Resolve ``interpret=None`` to the platform default.
+
+        Pallas kernels must run interpreted on CPU (CI), but interpreting
+        on a real TPU would silently deoptimize device runs — so auto
+        means "interpret unless jax is actually backed by a TPU".
+        """
+        if self.interpret is not None:
+            return self.interpret
+        import jax
+
+        return jax.default_backend() != "tpu"
 
     @staticmethod
     def baseline() -> "CompileOptions":
-        """Unoptimized reference: random scatter, no partitioning/caching."""
+        """Unoptimized reference: random scatter, no partitioning/caching,
+        no MIR passes — one kernel per launch, exactly as authored."""
         return CompileOptions(
             burst=False, cache=False, shuffle=False, compact_frontier=False,
-            pallas=False,
+            pallas=False, passes="none",
         )
 
     @staticmethod

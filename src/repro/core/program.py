@@ -11,7 +11,12 @@ This module is the Python surface of that promise:
 * :func:`compile` is keyed by a **content hash** of (source, options), so
   identical programs share one compiled artifact no matter how many string
   objects carry them, and distinct programs can never collide (the old
-  ``id(src)``-keyed cache could alias unrelated sources after GC).
+  ``id(src)``-keyed cache could alias unrelated sources after GC). Because
+  ``CompileOptions.passes`` and ``scalar_bindings`` are part of the hashed
+  options, pass-pipeline ablations and compile-time specializations get
+  their own cache entries; the options-independent *analyzed* module is
+  cached once per source, and the MIR pass pipeline
+  (:mod:`repro.core.passes`) specializes a copy of it per option set.
 * Every host scalar declared in the program (``const root: int = 0;``)
   becomes a declared **run-time parameter** of the :class:`Program`.
   Scalars declared *without* an initializer are required at ``run()``.
@@ -25,9 +30,9 @@ import hashlib
 import numbers
 import threading
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple, TYPE_CHECKING
+from typing import Any, Dict, Optional, TYPE_CHECKING
 
-from . import mir, semantic
+from . import mir, passes, semantic
 from .options import CompileOptions
 from .parser import parse
 
@@ -196,10 +201,15 @@ def compile_program(src: str, options: Optional[CompileOptions] = None) -> Progr
         return prog
     if module is None:
         module = semantic.analyze(parse(src))
-    prog = Program(module, opts, key, src)
+        with _CACHE_LOCK:
+            # another thread may have raced us; keep the first base module
+            module = _MODULE_CACHE.setdefault(src_key, module)
+    # the MIR optimization pipeline (CompileOptions.passes) specializes the
+    # options-independent base module per option set; it works on a copy,
+    # so the cached base stays pristine for other option sets
+    optimized = passes.run_pipeline(module, opts)
+    prog = Program(optimized, opts, key, src)
     with _CACHE_LOCK:
-        # another thread may have raced us; keep the first artifacts
-        module = _MODULE_CACHE.setdefault(src_key, module)
         prog = _PROGRAM_CACHE.setdefault(key, prog)
     return prog
 

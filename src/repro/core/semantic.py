@@ -361,3 +361,28 @@ class Analyzer:
 
 def analyze(program: fir.Program) -> mir.Module:
     return Analyzer(program).analyze()
+
+
+def reanalyze_kernel(k: mir.Kernel, module: mir.Module) -> mir.Kernel:
+    """Re-run the per-kernel detectors after a pass mutated the body.
+
+    Optimization passes (``repro.core.passes``) rewrite kernel bodies —
+    constant folding substitutes literals, dead-property elimination strips
+    writes, fusion concatenates bodies. Afterwards the Property Detector
+    results, frontier annotation, and RAW decoupling must be recomputed so
+    the back-end lowers the *transformed* body, not stale metadata.
+    """
+    k.reads = []
+    k.writes = []
+    k.scalar_reads = set()
+    k.accumulators = set()
+    k.snapshot_props = set()
+    k.frontier = None
+    k.has_neighbor_loop = False
+    k.writes_weight = False
+    a = Analyzer(module.program)
+    a._normalize_rmw(k.func.body, module)
+    a._detect_properties(k, module)
+    a._detect_frontier(k, module)
+    a._decouple_raw(k)
+    return k

@@ -1,0 +1,442 @@
+"""MIR optimization pass pipeline tests (repro.core.passes).
+
+Covers the acceptance criteria of the pass-pipeline PR:
+* passes-on vs passes-off produce identical results for every evaluation
+  algorithm on BOTH execution backends (local and distributed);
+* BFS + PageRank show >= 1.3x kernel-launch reduction via EngineStats;
+* golden Module.describe() snapshots pin which kernels fused, which
+  direction each edge kernel was assigned, and what dce/fold removed;
+* CompileOptions.passes participates in the Program cache key.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.core import CompileOptions, PassError
+from repro.core import mir
+from repro.core.passes import DEFAULT_PASSES, parse_pass_list
+from repro.core.program import ProgramError
+from repro.algorithms import sources
+from repro.graph import generators
+
+PASSES_OFF = CompileOptions(passes="none")
+
+ALGORITHMS = {
+    "bfs": (sources.BFS_ECP, {"root": 0}),
+    "bfs_hybrid": (sources.BFS_HYBRID, {"root": 0}),
+    "pagerank": (sources.PAGERANK, {"iters": 6}),
+    "sssp": (sources.SSSP, {"root": 0}),
+    "ppr": (sources.PPR, {"max_iters": 20}),
+    "cgaw": (sources.CGAW, {}),
+    "wcc": (sources.WCC, {}),
+    "kcore": (sources.KCORE, {"k": 2}),
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.power_law(200, 1400, seed=5, weighted=True)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: identical results with passes on vs off, both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", list(ALGORITHMS), ids=list(ALGORITHMS))
+@pytest.mark.parametrize("backend", ["local", "distributed"])
+def test_passes_preserve_results(graph, algo, backend):
+    src, params = ALGORITHMS[algo]
+    r_on = repro.compile(src, CompileOptions.full()).bind(
+        graph, backend=backend).run(**params)
+    r_off = repro.compile(src, PASSES_OFF).bind(
+        graph, backend=backend).run(**params)
+    assert set(r_on.properties) == set(r_off.properties)
+    for name, want in r_off.properties.items():
+        np.testing.assert_allclose(
+            r_on.properties[name], want, rtol=1e-5,
+            err_msg=f"{algo}/{backend}/{name} diverged with passes enabled",
+        )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: >= 1.3x launch reduction on BFS + PageRank, both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["bfs", "pagerank"])
+@pytest.mark.parametrize("backend", ["local", "distributed"])
+def test_launch_reduction_floor(graph, algo, backend):
+    src, params = ALGORITHMS[algo]
+    if algo == "bfs":  # a reachable frontier exercises the full iteration loop
+        params = {"root": int(np.argmax(graph.out_degree))}
+    r_on = repro.compile(src, CompileOptions.full()).bind(
+        graph, backend=backend).run(**params)
+    r_off = repro.compile(src, PASSES_OFF).bind(
+        graph, backend=backend).run(**params)
+    on = r_on.stats.total_launches
+    off = r_off.stats.total_launches
+    assert off / on >= 1.3, f"{algo}/{backend}: only {off / on:.2f}x reduction"
+    assert r_on.stats.fused_launches > 0
+    # fusion is the only pass that changes launch counts: the saved-launch
+    # counter must account for the entire difference
+    assert r_on.stats.launches_saved == off - on
+    assert r_off.stats.fused_launches == 0
+
+
+def test_distributed_still_supersteps_fused_pipelines(graph):
+    """The distributed engine consumes a fused edge->vertex pipeline by
+    running its edge stage as a shuffle superstep, not by degrading to a
+    purely local launch."""
+    prog = repro.compile(sources.PAGERANK, CompileOptions.full())
+    res = prog.bind(graph, backend="distributed").run(iters=6)
+    assert res.stats.dist_supersteps == 6
+    assert res.stats.fused_launches == 6
+
+
+# ---------------------------------------------------------------------------
+# golden describe() snapshots: the pass report is part of the artifact
+# ---------------------------------------------------------------------------
+
+
+def test_describe_reports_pagerank_pipeline():
+    text = repro.compile(sources.PAGERANK, CompileOptions.full()).describe()
+    assert "kernel computeContrib__applyRank [pipeline: computeContrib -> applyRank]" in text
+    assert "pass direction: computeContrib -> dense (loop-invariant guard on ['deg'])" in text
+    assert ("pass fuse: computeContrib + applyRank -> computeContrib__applyRank "
+            "(pipeline [edge -> vertex])") in text
+
+
+def test_describe_reports_bfs_fusion_and_direction():
+    text = repro.compile(sources.BFS_ECP, CompileOptions.full()).describe()
+    assert "kernel VertexUpdate__VertexApply [vertex]" in text
+    assert ("pass fuse: VertexUpdate + VertexApply -> VertexUpdate__VertexApply "
+            "(merged vertex kernel)") in text
+    assert "pass direction: EdgeTraversal -> sparse (dynamic frontier on ['old_level'])" in text
+    assert "direction sparse" in text
+
+
+def test_describe_without_passes_has_no_report():
+    text = repro.compile(sources.PAGERANK, PASSES_OFF).describe()
+    assert "pass " not in text
+    assert "pipeline" not in text
+
+
+# ---------------------------------------------------------------------------
+# fuse pass unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_fusion_groups_recorded():
+    prog = repro.compile(sources.BFS_ECP, CompileOptions.full())
+    assert prog.module.fusion_groups == {
+        "VertexUpdate__VertexApply": ("VertexUpdate", "VertexApply"),
+    }
+    # original kernels stay addressable (other sites may launch them solo)
+    assert "VertexUpdate" in prog.module.kernels
+    assert "VertexApply" in prog.module.kernels
+
+
+def test_no_fusion_from_vertex_into_edge_kernel(graph):
+    """A group never extends vertex -> edge: `vertices.init(initz);
+    edges.process(count)` keeps two separate launches (the Fig. 4 pipeline
+    shape is edge traversal -> vertex apply, not init -> traversal)."""
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const acc: vector{Vertex}(int);
+func initz(v: Vertex)
+    acc[v] = 0;
+end
+func count(src: Vertex, dst: Vertex)
+    acc[dst] += 1;
+end
+func main()
+    vertices.init(initz);
+    edges.process(count);
+end
+"""
+    prog = repro.compile(src, CompileOptions.full())
+    assert prog.module.fusion_groups == {}
+    res = prog.bind(graph).run()
+    assert res.stats.kernel_launches == {"initz": 1, "count": 1}
+    np.testing.assert_array_equal(res.properties["acc"], graph.in_degree)
+
+
+def test_sparse_edge_kernel_not_fused_keeps_compaction(graph):
+    """BFS's EdgeTraversal has a dynamic frontier: it must stay a
+    standalone launch so the engine can frontier-compact it."""
+    prog = repro.compile(sources.BFS_ECP, CompileOptions.full())
+    assert prog.module.kernels["EdgeTraversal"].direction is mir.Direction.SPARSE
+    res = prog.bind(graph).run(root=int(np.argmax(graph.out_degree)))
+    assert "EdgeTraversal" in res.stats.kernel_launches
+    assert res.stats.compacted_launches > 0
+
+
+def test_cgaw_edge_edge_pipeline(graph):
+    """Adjacent edge kernels (score; normalize) fuse into one pipeline —
+    stage-boundary commits keep the weight read-after-write exact."""
+    prog = repro.compile(sources.CGAW, CompileOptions.full())
+    assert prog.module.fusion_groups.get("score__normalize") == ("score", "normalize")
+    kern = prog.module.kernels["score__normalize"]
+    assert isinstance(kern, mir.PipelineKernel)
+    assert [s.name for s in kern.edge_stages] == ["score", "normalize"]
+
+
+# ---------------------------------------------------------------------------
+# direction pass unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_direction_assignments():
+    m = repro.compile(sources.PAGERANK, CompileOptions.full()).module
+    assert m.kernels["computeContrib"].direction is mir.Direction.DENSE
+    m = repro.compile(sources.SSSP, CompileOptions.full()).module
+    assert m.kernels["relax"].direction is mir.Direction.SPARSE
+    # passes off: the engine keeps its runtime-only fallback heuristic
+    m = repro.compile(sources.PAGERANK, PASSES_OFF).module
+    assert m.kernels["computeContrib"].direction is mir.Direction.AUTO
+
+
+def test_dense_direction_skips_frontier_mask(graph):
+    """A DENSE verdict must eliminate the per-launch host-side frontier
+    mask evaluation (PageRank's deg[src] > 0 guard is loop-invariant)."""
+    prog = repro.compile(sources.PAGERANK, CompileOptions(passes="direction"))
+    res = prog.bind(graph).run(iters=5)
+    assert res.stats.compacted_launches == 0
+    assert res.stats.full_launches > 0
+
+
+# ---------------------------------------------------------------------------
+# fold pass: compile-time scalar bindings
+# ---------------------------------------------------------------------------
+
+
+def test_scalar_binding_specializes_and_removes_param(graph):
+    opts = CompileOptions(scalar_bindings=(("damp", 0.85),))
+    prog = repro.compile(sources.PAGERANK, opts)
+    assert "damp" not in prog.params
+    assert any(l.startswith("fold: bound scalar damp") for l in prog.module.pass_report)
+    want = repro.compile(sources.PAGERANK, PASSES_OFF).bind(graph).run(iters=6)
+    got = prog.bind(graph).run(iters=6)
+    np.testing.assert_allclose(got.properties["rank"], want.properties["rank"], rtol=1e-6)
+    with pytest.raises(ProgramError, match="unknown run-time parameter"):
+        prog.bind(graph).run(damp=0.5)
+
+
+def test_binding_unknown_or_host_mutated_scalar_raises():
+    with pytest.raises(PassError, match="not a declared host scalar"):
+        repro.compile(sources.PAGERANK, CompileOptions(scalar_bindings=(("nope", 1),)))
+    # BFS's `level` is incremented by the host loop: binding it is unsound
+    with pytest.raises(PassError, match="host program assigns it"):
+        repro.compile(sources.BFS_ECP, CompileOptions(scalar_bindings=(("level", 1),)))
+
+
+def test_binding_substitutes_into_other_scalar_inits(graph):
+    """A bound scalar referenced by ANOTHER scalar's initializer must be
+    substituted there too (the engine evaluates inits at construction)."""
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const mark: vector{Vertex}(int);
+const k: int = 3;
+const kk: int = k * 2;
+func initz(v: Vertex)
+    mark[v] = kk;
+end
+func main()
+    vertices.init(initz);
+end
+"""
+    prog = repro.compile(src, CompileOptions(scalar_bindings=(("k", 5),)))
+    assert "k" not in prog.params and "kk" in prog.params
+    res = prog.bind(graph).run()
+    np.testing.assert_array_equal(res.properties["mark"], 10)
+
+
+def test_binding_without_fold_pass_raises():
+    """scalar_bindings must never be silently ignored: a pipeline that
+    omits `fold` cannot honor the requested specialization."""
+    for spec in ("none", "dce,fuse"):
+        with pytest.raises(PassError, match="requires the 'fold' pass"):
+            repro.compile(
+                sources.PAGERANK,
+                CompileOptions(passes=spec, scalar_bindings=(("damp", 0.5),)),
+            )
+
+
+# ---------------------------------------------------------------------------
+# dce pass: dead properties, scalars, and folded-empty kernels
+# ---------------------------------------------------------------------------
+
+DCE_SRC = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const acc: vector{Vertex}(int);
+const unused: vector{Vertex}(float);
+const ghost: int = 7;
+const flag: bool = false;
+func initz(v: Vertex)
+    acc[v] = 0;
+end
+func gated(v: Vertex)
+    if (flag)
+        acc[v] = 99;
+    end
+end
+func count(src: Vertex, dst: Vertex)
+    acc[dst] += 1;
+end
+func main()
+    vertices.init(initz);
+    vertices.process(gated);
+    edges.process(count);
+end
+"""
+
+
+def test_dce_removes_dead_buffers_scalars_and_kernels(graph):
+    prog = repro.compile(DCE_SRC, CompileOptions(scalar_bindings=(("flag", False),)))
+    m = prog.module
+    assert "unused" not in m.properties and "unused" not in m.memory.buffers
+    assert "ghost" not in m.scalars
+    assert "gated" not in m.kernels  # body folded to nothing -> launch removed
+    # channels renumbered densely over the surviving buffers
+    assert [b[2] for b in m.memory.buffers.values()] == list(range(len(m.memory.buffers)))
+    res = prog.bind(graph).run()
+    np.testing.assert_array_equal(res.properties["acc"], graph.in_degree)
+    assert "unused" not in res.properties
+    assert "gated" not in res.stats.kernel_launches
+
+
+def test_dce_keeps_write_only_outputs(graph):
+    """Properties that are written but never read are observable results
+    (e.g. accumulators surfaced via EngineResult) — never eliminated."""
+    prog = repro.compile(DCE_SRC, CompileOptions.full())
+    assert "acc" in prog.module.properties
+
+
+def test_dce_keeps_write_only_scalar_and_chained_inits(graph):
+    """Write-only scalars are observable via EngineResult.host_env (like
+    write-only property buffers) — kept. And a scalar referenced only by
+    ANOTHER scalar's initializer is a genuine use — also kept."""
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const acc: vector{Vertex}(int);
+const base: int = 3;
+const derived: int = base + 1;
+const wonly: int = 0;
+func count(src: Vertex, dst: Vertex)
+    acc[dst] += 1;
+end
+func main()
+    wonly = derived;
+    edges.process(count);
+end
+"""
+    prog = repro.compile(src, CompileOptions.full())
+    assert {"base", "derived", "wonly"} <= set(prog.module.scalars)
+    res = prog.bind(graph).run()
+    assert res.host_env["wonly"] == 4
+    np.testing.assert_array_equal(res.properties["acc"], graph.in_degree)
+    # the same program with passes off agrees on the observable surface
+    res_off = repro.compile(src, PASSES_OFF).bind(graph).run()
+    assert res_off.host_env["wonly"] == res.host_env["wonly"]
+
+
+def test_kernel_comparisons_fold_with_float32_semantics(graph):
+    """Literal comparisons in kernel bodies must fold the way the DEVICE
+    compares (float32): 0.1 + 0.2 == 0.3 is True in float32 but False in
+    float64 — folding with host semantics would delete a live branch."""
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const mark: vector{Vertex}(int);
+func initz(v: Vertex)
+    if (0.1 + 0.2 == 0.3)
+        mark[v] = 1;
+    end
+end
+func main()
+    vertices.init(initz);
+end
+"""
+    for opts in (CompileOptions.full(), PASSES_OFF):
+        res = repro.compile(src, opts).bind(graph).run()
+        assert res.properties["mark"][0] == 1, f"f32-equal branch lost ({opts.passes})"
+
+
+def test_host_expressions_not_folded_with_device_semantics(graph):
+    """Host code evaluates in Python float64; the fold pass must not
+    simplify host arithmetic with device float32 semantics. 16777216.0 +
+    1.0 is exact in float64 but rounds away in float32."""
+    src = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const mark: vector{Vertex}(int);
+func initz(v: Vertex)
+    mark[v] = 0;
+end
+func main()
+    vertices.init(initz);
+    var hit: int = 0;
+    if (16777216.0 + 1.0 > 16777216.5)
+        hit = 1;
+    end
+    mark[0] = hit;
+end
+"""
+    for opts in (CompileOptions.full(), PASSES_OFF):
+        res = repro.compile(src, opts).bind(graph).run()
+        assert res.properties["mark"][0] == 1, f"host float64 branch lost ({opts.passes})"
+
+
+# ---------------------------------------------------------------------------
+# options / cache-key plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_passes_participate_in_cache_key():
+    a = repro.compile(sources.PAGERANK, CompileOptions.full())
+    b = repro.compile(sources.PAGERANK, PASSES_OFF)
+    assert a is not b and a.fingerprint != b.fingerprint
+    # and the base module cache stays pristine for other option sets
+    assert "computeContrib__applyRank" not in b.module.kernels
+
+
+def test_parse_pass_list():
+    assert parse_pass_list("default") == DEFAULT_PASSES
+    assert parse_pass_list("none") == ()
+    assert parse_pass_list("fold, fuse") == ("fold", "fuse")
+    with pytest.raises(PassError, match="unknown pass"):
+        parse_pass_list("bogus")
+
+
+def test_baseline_options_disable_passes():
+    assert CompileOptions.baseline().passes == "none"
+    assert CompileOptions.full().passes == "default"
+
+
+def test_interpret_defaults_to_auto():
+    opts = CompileOptions.full(pallas=True)
+    assert opts.interpret is None  # auto
+    # on CPU/GPU hosts auto resolves to interpreted Pallas
+    import jax
+
+    expected = jax.default_backend() != "tpu"
+    assert opts.interpret_effective is expected
+    assert CompileOptions(interpret=False).interpret_effective is False
+    assert CompileOptions(interpret=True).interpret_effective is True
