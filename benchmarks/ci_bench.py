@@ -43,13 +43,19 @@ LAUNCH_REDUCTION_FLOOR = 1.3
 def _workloads():
     import numpy as np
 
-    from repro.algorithms import sources
+    from repro.algorithms import embedded, sources
     from repro.graph import generators
 
     g_bfs = generators.power_law(2000, 16000, seed=0)
     g_pr = generators.power_law(2000, 16000, seed=1)
+    bfs_root = int(np.argmax(g_bfs.out_degree))
     return {
-        "bfs": (sources.BFS_ECP, g_bfs, {"root": int(np.argmax(g_bfs.out_degree))}),
+        "bfs": (sources.BFS_ECP, g_bfs, {"root": bfs_root}),
+        # same algorithm/graph/params compiled through the embedded Python
+        # front-end: gates compile-path wall-time parity with the text
+        # parser (to_fir + analyze vs lex + parse + analyze) and that the
+        # pass pipeline treats both front-ends identically
+        "bfs_embedded": (embedded.build_bfs_ecp(), g_bfs, {"root": bfs_root}),
         "pagerank": (sources.PAGERANK, g_pr, {"iters": 10}),
     }
 

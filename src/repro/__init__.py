@@ -7,6 +7,10 @@ Graph-program quickstart (compile once, bind many, run parameterized):
     program = repro.compile(src)            # Program (content-hash cached)
     session = program.bind(graph)           # Session on the local backend
     result  = session.run(root=3)           # explicit run-time parameters
+
+``src`` is either ``.gt`` text or an embedded :class:`GraphProgram`
+(:mod:`repro.frontend`) — two front-ends, one compiler: both produce the
+same MIR and share one content-hash cache entry.
 """
 
 from .core import (  # noqa: F401 - re-exported public API
@@ -18,13 +22,16 @@ from .core import (  # noqa: F401 - re-exported public API
     compile,
     compile_program,
 )
+from .frontend import FrontendError, GraphProgram  # noqa: F401
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
 __all__ = [
     "CompileOptions",
     "Program",
     "ProgramError",
+    "GraphProgram",
+    "FrontendError",
     "Session",
     "SessionPool",
     "compile",

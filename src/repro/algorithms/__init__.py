@@ -1,10 +1,18 @@
 """The paper's five evaluation algorithms, written in the Graphitron DSL.
 
 Each algorithm is a ``.gt``-style source string (paper Fig. 1/2 syntax)
-plus a convenience runner. These are the exact programs used by the
-benchmarks and the correctness tests (oracles: networkx / numpy).
+plus a convenience runner; BFS and PageRank additionally ship as embedded
+:class:`~repro.frontend.GraphProgram` twins (:mod:`.embedded`) that
+compile to the same cache entry. These are the exact programs used by
+the benchmarks and the correctness tests (oracles: networkx / numpy).
 """
 from .sources import BFS_ECP, BFS_HYBRID, PAGERANK, SSSP, PPR, CGAW, WCC, KCORE
+from .embedded import (
+    BFS_ECP_EMBEDDED,
+    PAGERANK_EMBEDDED,
+    build_bfs_ecp,
+    build_pagerank,
+)
 from .runners import (
     run_bfs,
     run_bfs_hybrid,
@@ -18,6 +26,7 @@ from .runners import (
 
 __all__ = [
     "BFS_ECP", "BFS_HYBRID", "PAGERANK", "SSSP", "PPR", "CGAW", "WCC", "KCORE",
+    "BFS_ECP_EMBEDDED", "PAGERANK_EMBEDDED", "build_bfs_ecp", "build_pagerank",
     "run_bfs", "run_bfs_hybrid", "run_pagerank", "run_sssp", "run_ppr",
     "run_cgaw", "run_wcc", "run_kcore",
 ]

@@ -1,15 +1,21 @@
 """Convenience runners: thin wrappers over the Program/Session API.
 
 Each runner compiles its algorithm once (``repro.compile`` is keyed by a
-content hash of source + options, so repeated calls share one artifact),
-binds a session to the caller's graph, and runs it with explicit
-parameters. Each returns the algorithm's primary result array (mapped
-back to original vertex/edge ids) plus the EngineResult for stats
-inspection.
+content hash of the canonical MIR + options, so repeated calls share one
+artifact), binds a session to the caller's graph, and runs it with
+explicit parameters. Each returns the algorithm's primary result array
+(mapped back to original vertex/edge ids) plus the EngineResult for
+stats inspection.
+
+Every runner takes an optional ``source`` override accepting **either
+front-end** — a ``.gt`` text string or an embedded
+:class:`repro.frontend.GraphProgram` (e.g. the twins in
+:mod:`repro.algorithms.embedded`) — as long as it declares the
+properties/parameters the runner extracts.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, TYPE_CHECKING, Union
 
 import numpy as np
 
@@ -18,17 +24,26 @@ from ..core.program import compile_program
 from ..graph.storage import GraphData
 from . import sources
 
-_ARGV = ["prog", "<graph>"]
+if TYPE_CHECKING:  # pragma: no cover
+    from ..frontend import GraphProgram
+
+Source = Union[str, "GraphProgram"]
+
+# immutable: every bind() gets a fresh list (a caller mutating its
+# session's argv must not be able to poison subsequent runners)
+_ARGV = ("prog", "<graph>")
 
 
 def _run(
-    src: str,
+    src: Source,
     graph: GraphData,
     options: Optional[CompileOptions],
     params: Dict,
     backend: str = "local",
 ):
-    session = compile_program(src, options).bind(graph, backend=backend, argv=_ARGV)
+    session = compile_program(src, options).bind(
+        graph, backend=backend, argv=list(_ARGV)
+    )
     return session.run(**params)
 
 
@@ -37,8 +52,10 @@ def run_bfs(
     root: int = 0,
     options: Optional[CompileOptions] = None,
     backend: str = "local",
+    source: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.BFS_ECP, graph, options, {"root": root}, backend)
+    res = _run(source if source is not None else sources.BFS_ECP,
+               graph, options, {"root": root}, backend)
     return res.properties["old_level"], res
 
 
@@ -47,8 +64,10 @@ def run_bfs_hybrid(
     root: int = 0,
     options: Optional[CompileOptions] = None,
     backend: str = "local",
+    source: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.BFS_HYBRID, graph, options, {"root": root}, backend)
+    res = _run(source if source is not None else sources.BFS_HYBRID,
+               graph, options, {"root": root}, backend)
     return res.properties["old_level"], res
 
 
@@ -57,8 +76,10 @@ def run_pagerank(
     iters: int = 20,
     options: Optional[CompileOptions] = None,
     backend: str = "local",
+    source: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.PAGERANK, graph, options, {"iters": iters}, backend)
+    res = _run(source if source is not None else sources.PAGERANK,
+               graph, options, {"iters": iters}, backend)
     return res.properties["rank"], res
 
 
@@ -67,8 +88,10 @@ def run_sssp(
     root: int = 0,
     options: Optional[CompileOptions] = None,
     backend: str = "local",
+    source: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.SSSP, graph, options, {"root": root}, backend)
+    res = _run(source if source is not None else sources.SSSP,
+               graph, options, {"root": root}, backend)
     return res.properties["SP"], res
 
 
@@ -78,9 +101,13 @@ def run_ppr(
     options: Optional[CompileOptions] = None,
     max_iters: int = 100,
     backend: str = "local",
+    program: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
+    # NB: `source` here is the personalization vertex (paper Algorithm 1),
+    # so the front-end override parameter is named `program`
     res = _run(
-        sources.PPR, graph, options, {"source": source, "max_iters": max_iters}, backend
+        program if program is not None else sources.PPR,
+        graph, options, {"source": source, "max_iters": max_iters}, backend,
     )
     return res.properties["PR_old"], res
 
@@ -89,8 +116,10 @@ def run_cgaw(
     graph: GraphData,
     options: Optional[CompileOptions] = None,
     backend: str = "local",
+    source: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.CGAW, graph, options, {}, backend)
+    res = _run(source if source is not None else sources.CGAW,
+               graph, options, {}, backend)
     return res.properties["weight"], res
 
 
@@ -98,8 +127,10 @@ def run_wcc(
     graph: GraphData,
     options: Optional[CompileOptions] = None,
     backend: str = "local",
+    source: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.WCC, graph, options, {}, backend)
+    res = _run(source if source is not None else sources.WCC,
+               graph, options, {}, backend)
     return res.properties["comp"], res
 
 
@@ -108,13 +139,15 @@ def run_kcore(
     k: int = 2,
     options: Optional[CompileOptions] = None,
     backend: str = "local",
+    source: Optional[Source] = None,
 ) -> Tuple[np.ndarray, object]:
-    res = _run(sources.KCORE, graph, options, {"k": k}, backend)
+    res = _run(source if source is not None else sources.KCORE,
+               graph, options, {"k": k}, backend)
     return res.properties["alive"], res
 
 
 def make_warm_runner(
-    src: str,
+    src: Source,
     graph: GraphData,
     options: Optional[CompileOptions] = None,
     overrides: Optional[dict] = None,
@@ -122,8 +155,10 @@ def make_warm_runner(
 ):
     """Bind a session once (compiling all kernels on the first call) and
     return a zero-arg callable that re-runs it — the "post-synthesis
-    accelerator execution" timing mode."""
-    session = compile_program(src, options).bind(graph, backend=backend, argv=_ARGV)
+    accelerator execution" timing mode. ``src`` is text or embedded."""
+    session = compile_program(src, options).bind(
+        graph, backend=backend, argv=list(_ARGV)
+    )
     params = dict(overrides or {})
 
     def run():

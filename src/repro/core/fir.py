@@ -332,5 +332,14 @@ def dump(node, indent: int = 0) -> str:
     if isinstance(node, (IntLit, FloatLit, BoolLit)):
         return str(node.value).lower() if isinstance(node, BoolLit) else str(node.value)
     if isinstance(node, StrLit):
-        return repr(node.value)
+        # double-quoted: the lexer only accepts " strings, so dump() output
+        # stays valid Graphitron (round-trip parse(dump(p)) requires it);
+        # the lexer has no escape syntax, so quotes/newlines cannot be
+        # represented — reject them rather than emit unlexable text
+        if '"' in node.value or "\n" in node.value:
+            raise ValueError(
+                f"string constant {node.value!r} cannot be dumped: the DSL "
+                "has no escape syntax for '\"' or newlines"
+            )
+        return '"' + node.value + '"'
     raise TypeError(f"cannot dump {type(node)}")

@@ -2,7 +2,10 @@
 
 Produces a token stream from source text. Illegal expressions (unclosed
 string constants, stray characters) raise :class:`LexError`, mirroring the
-front-end behaviour described in paper §III-B1.
+front-end behaviour described in paper §III-B1. Every token carries its
+line *and* column so parse/semantic diagnostics can point at the exact
+offending character (surfaced with a source excerpt by
+:class:`repro.core.program.ProgramError`).
 """
 from __future__ import annotations
 
@@ -23,7 +26,12 @@ SINGLE_OPS = "=+-*/<>!&|;:,.()[]{}"
 
 
 class LexError(SyntaxError):
-    pass
+    """Lexical error with a 1-based ``line``/``col`` source location."""
+
+    def __init__(self, msg: str, line: int = 0, col: int = 0):
+        super().__init__(msg)
+        self.line = line
+        self.col = col
 
 
 @dataclass(frozen=True)
@@ -31,19 +39,26 @@ class Token:
     kind: str  # 'ident' | 'int' | 'float' | 'string' | 'kw' | 'op' | 'eof'
     text: str
     line: int
+    col: int = 0  # 1-based column of the token's first character
 
     def __repr__(self) -> str:  # compact for error messages
-        return f"{self.kind}:{self.text!r}@{self.line}"
+        return f"{self.kind}:{self.text!r}@{self.line}:{self.col}"
 
 
 def tokenize(src: str) -> List[Token]:
     toks: List[Token] = []
     i, n, line = 0, len(src), 1
+    line_start = 0  # offset of the first character of the current line
+
+    def col(at: int) -> int:
+        return at - line_start + 1
+
     while i < n:
         c = src[i]
         if c == "\n":
             line += 1
             i += 1
+            line_start = i
             continue
         if c in " \t\r":
             i += 1
@@ -56,11 +71,17 @@ def tokenize(src: str) -> List[Token]:
             j = i + 1
             while j < n and src[j] != '"':
                 if src[j] == "\n":
-                    raise LexError(f"line {line}: unclosed string constant")
+                    raise LexError(
+                        f"line {line}, col {col(i)}: unclosed string constant",
+                        line, col(i),
+                    )
                 j += 1
             if j >= n:
-                raise LexError(f"line {line}: unclosed string constant")
-            toks.append(Token("string", src[i + 1 : j], line))
+                raise LexError(
+                    f"line {line}, col {col(i)}: unclosed string constant",
+                    line, col(i),
+                )
+            toks.append(Token("string", src[i + 1 : j], line, col(i)))
             i = j + 1
             continue
         if c.isdigit() or (c == "." and i + 1 < n and src[i + 1].isdigit()):
@@ -74,7 +95,7 @@ def tokenize(src: str) -> List[Token]:
                     seen_dot = True
                 j += 1
             text = src[i:j]
-            toks.append(Token("float" if "." in text else "int", text, line))
+            toks.append(Token("float" if "." in text else "int", text, line, col(i)))
             i = j
             continue
         if c.isalpha() or c == "_":
@@ -88,27 +109,29 @@ def tokenize(src: str) -> List[Token]:
                 while k < n and src[k] in " \t":
                     k += 1
                 if k < n and src[k] == "=" and (k + 1 >= n or src[k + 1] != "="):
-                    toks.append(Token("op", text + "=", line))
+                    toks.append(Token("op", text + "=", line, col(i)))
                     i = k + 1
                     continue
             kind = "kw" if text in KEYWORDS else "ident"
-            toks.append(Token(kind, text, line))
+            toks.append(Token(kind, text, line, col(i)))
             i = j
             continue
         matched = False
         for op in MULTI_OPS:
             if src.startswith(op, i):
                 # careful: '==' must not be split; '+=' etc. are fine
-                toks.append(Token("op", op, line))
+                toks.append(Token("op", op, line, col(i)))
                 i += len(op)
                 matched = True
                 break
         if matched:
             continue
         if c in SINGLE_OPS:
-            toks.append(Token("op", c, line))
+            toks.append(Token("op", c, line, col(i)))
             i += 1
             continue
-        raise LexError(f"line {line}: illegal character {c!r}")
-    toks.append(Token("eof", "", line))
+        raise LexError(
+            f"line {line}, col {col(i)}: illegal character {c!r}", line, col(i)
+        )
+    toks.append(Token("eof", "", line, col(i)))
     return toks

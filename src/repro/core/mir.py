@@ -15,6 +15,7 @@ and produces:
 from __future__ import annotations
 
 import enum
+import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -270,3 +271,30 @@ class Module:
         for entry in self.pass_report:
             lines.append(f"  pass {entry}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# canonical serialization / fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def canonical_serialize(module: Module) -> str:
+    """Canonical text form of an analyzed module, front-end independent.
+
+    Two programs that reach the middle-end as the same MIR — whether they
+    were parsed from ``.gt`` text or built by the embedded Python front-end
+    (:mod:`repro.frontend`) — serialize to the same string: the symbol
+    table / Property Detector dump (:meth:`Module.describe`) followed by
+    the normalized FIR program (``fir.dump`` is formatting-, comment- and
+    parenthesization-independent, and semantic analysis has already applied
+    the RMW normalization, so surface spelling differences vanish).
+
+    This is the string the Program cache is keyed on: see
+    :func:`fingerprint` and :func:`repro.core.program.compile_program`.
+    """
+    return module.describe() + "\n%% fir\n" + fir.dump(module.program)
+
+
+def fingerprint(module: Module) -> str:
+    """Content hash of the canonical serialized MIR (the cache identity)."""
+    return hashlib.sha256(canonical_serialize(module).encode("utf-8")).hexdigest()

@@ -13,7 +13,16 @@ from .lexer import Token, tokenize
 
 
 class ParseError(SyntaxError):
-    pass
+    """Parse error with a 1-based ``line``/``col`` source location."""
+
+    def __init__(self, msg: str, line: int = 0, col: int = 0):
+        super().__init__(msg)
+        self.line = line
+        self.col = col
+
+
+def _err(msg: str, tok: Token) -> ParseError:
+    return ParseError(f"line {tok.line}, col {tok.col}: {msg}", tok.line, tok.col)
 
 
 class Parser:
@@ -38,7 +47,7 @@ class Parser:
         t = self.peek()
         if not self.at(kind, text):
             want = text or kind
-            raise ParseError(f"line {t.line}: expected {want!r}, found {t!r}")
+            raise _err(f"expected {want!r}, found {t!r}", t)
         return self.next()
 
     def accept(self, kind: str, text: Optional[str] = None) -> Optional[Token]:
@@ -58,7 +67,7 @@ class Parser:
                 prog.funcs.append(self.parse_func())
             else:
                 t = self.peek()
-                raise ParseError(f"line {t.line}: expected declaration, found {t!r}")
+                raise _err(f"expected declaration, found {t!r}", t)
         return prog
 
     def parse_element(self) -> fir.ElementDecl:
@@ -101,7 +110,7 @@ class Parser:
             if self.accept("op", ","):
                 wt = self.next()
                 if wt.text not in ("int", "float"):
-                    raise ParseError(f"line {wt.line}: edge weight must be int or float")
+                    raise _err("edge weight must be int or float", wt)
                 weight = wt.text
             self.expect("op", ")")
             return fir.EdgesetType(elem, src, dst, weight)
@@ -112,13 +121,13 @@ class Parser:
             self.expect("op", "(")
             st = self.next()
             if st.text not in ("int", "float", "bool"):
-                raise ParseError(f"line {st.line}: vector scalar must be int/float/bool")
+                raise _err("vector scalar must be int/float/bool", st)
             self.expect("op", ")")
             return fir.VectorType(elem, st.text)
         if t.kind == "ident":
             self.next()
             return fir.ElementType(t.text)
-        raise ParseError(f"line {t.line}: expected type, found {t!r}")
+        raise _err(f"expected type, found {t!r}", t)
 
     # -- functions -----------------------------------------------------------
     def parse_func(self) -> fir.FuncDecl:
@@ -192,7 +201,7 @@ class Parser:
             value = self.parse_expr()
             self.expect("op", ";")
             if not isinstance(expr, (fir.Ident, fir.Index)):
-                raise ParseError(f"line {t.line}: invalid assignment target")
+                raise _err("invalid assignment target", t)
             return fir.Assign(line=t.line, target=expr, value=value)
         for op_tok, op in (("min=", "min"), ("max=", "max"), ("+=", "+"), ("-=", "-"), ("*=", "*")):
             if self.at("op", op_tok):
@@ -200,7 +209,7 @@ class Parser:
                 value = self.parse_expr()
                 self.expect("op", ";")
                 if not isinstance(expr, (fir.Ident, fir.Index)):
-                    raise ParseError(f"line {t.line}: invalid reduce target")
+                    raise _err("invalid reduce target", t)
                 return fir.ReduceAssign(line=t.line, target=expr, op=op, value=value)
         self.expect("op", ";")
         return fir.ExprStmt(line=t.line, expr=expr)
@@ -304,7 +313,7 @@ class Parser:
             e = self.parse_expr()
             self.expect("op", ")")
             return e
-        raise ParseError(f"line {t.line}: expected expression, found {t!r}")
+        raise _err(f"expected expression, found {t!r}", t)
 
 
 def parse(src: str) -> fir.Program:

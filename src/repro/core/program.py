@@ -2,27 +2,47 @@
 
 The paper's workflow is: author an algorithm once, let the compiler pick
 the execution strategy (pipelining, shuffling, memory layout) per target.
-This module is the Python surface of that promise:
+This module is the Python surface of that promise, and it accepts **two
+front-ends for one compiler**:
 
-    program = repro.compile(src, options)        # compile once (cached)
+* **Text**: a ``.gt`` source string in the paper's Fig. 1 syntax, lexed
+  and parsed by :mod:`repro.core.parser`.
+* **Embedded**: a :class:`repro.frontend.GraphProgram` built in Python —
+  typed property/scalar handles plus ``@vertex_kernel`` / ``@edge_kernel``
+  decorated functions whose bodies are lowered from the Python AST.
+
+Both meet at the same MIR and flow through the same passes → lowering
+pipeline::
+
+    program = repro.compile(src_or_graphprogram, options)   # compile once
     session = program.bind(graph)                # bind to one graph+backend
     result  = session.run(root=3, iters=20)      # parameterized execution
 
-* :func:`compile` is keyed by a **content hash** of (source, options), so
-  identical programs share one compiled artifact no matter how many string
-  objects carry them, and distinct programs can never collide (the old
-  ``id(src)``-keyed cache could alias unrelated sources after GC). Because
-  ``CompileOptions.passes`` and ``scalar_bindings`` are part of the hashed
-  options, pass-pipeline ablations and compile-time specializations get
-  their own cache entries; the options-independent *analyzed* module is
-  cached once per source, and the MIR pass pipeline
-  (:mod:`repro.core.passes`) specializes a copy of it per option set.
-* Every host scalar declared in the program (``const root: int = 0;``)
-  becomes a declared **run-time parameter** of the :class:`Program`.
-  Scalars declared *without* an initializer are required at ``run()``.
+* :func:`compile` is keyed by a **content hash of the canonical serialized
+  MIR** (:func:`repro.core.mir.canonical_serialize`) combined with the
+  compile options. Keying on the MIR — not the surface text — means an
+  embedded program and its textual equivalent resolve to *one* cache
+  entry, as do two text sources differing only in comments/whitespace.
+  Because ``CompileOptions.passes`` and ``scalar_bindings`` are part of
+  the hashed options, pass-pipeline ablations and compile-time
+  specializations get their own cache entries; the options-independent
+  *analyzed* module is cached once per MIR fingerprint, and the MIR pass
+  pipeline (:mod:`repro.core.passes`) specializes a copy of it per option
+  set.
+* Front-end failures surface as :class:`ProgramError` with a precise
+  location: text sources report the 1-based line/column plus a caret
+  excerpt of the offending source line; embedded programs report the
+  Python file and line number of the offending decorated function.
+* Every host scalar declared in the program (``const root: int = 0;`` /
+  ``GraphProgram.scalar("root", int, init=0)``) becomes a declared
+  **run-time parameter** of the :class:`Program`. Scalars declared
+  *without* an initializer are required at ``run()``.
 * :meth:`Program.bind` places the artifact onto an execution backend
   ("local" single-device engine or "distributed" multi-device engine) and
   returns a reusable :class:`~repro.core.session.Session`.
+
+Migration between the two front-ends is mechanical; see the
+"two front-ends, one compiler" table in ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -30,19 +50,51 @@ import hashlib
 import numbers
 import threading
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, TYPE_CHECKING
+from typing import Any, Dict, Optional, Tuple, TYPE_CHECKING
 
 from . import mir, passes, semantic
+from .lexer import LexError
 from .options import CompileOptions
-from .parser import parse
+from .parser import ParseError, parse
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from ..frontend import GraphProgram
     from ..graph.storage import GraphData
     from .session import Session, SessionPool
 
 
 class ProgramError(Exception):
-    """Raised for bad compile/bind/run usage at the public API layer."""
+    """Raised for bad compile/bind/run usage at the public API layer.
+
+    Compile-time front-end failures carry a source location: ``line`` and
+    ``col`` (1-based, 0 = unknown) point into the ``.gt`` text for the
+    text front-end, or into the decorated function's Python file (named in
+    the message) for the embedded front-end.
+    """
+
+    def __init__(self, msg: str, line: int = 0, col: int = 0):
+        super().__init__(msg)
+        self.line = line
+        self.col = col
+
+
+def _excerpt(src: str, line: int, col: int) -> str:
+    """A diagnostic excerpt: the offending source line plus a caret."""
+    lines = src.splitlines()
+    if not (1 <= line <= len(lines)):
+        return ""
+    text = lines[line - 1]
+    out = f"\n  {line} | {text}"
+    if col >= 1:
+        out += "\n  " + " " * len(str(line)) + " | " + " " * (col - 1) + "^"
+    return out
+
+
+def _front_end_error(exc: Exception, src: str) -> ProgramError:
+    """Wrap a lex/parse/semantic failure in a located ProgramError."""
+    line = getattr(exc, "line", 0) or 0
+    col = getattr(exc, "col", 0) or 0
+    return ProgramError(f"{exc}{_excerpt(src, line, col)}", line, col)
 
 
 @dataclass(frozen=True)
@@ -83,9 +135,23 @@ def _coerce_param(spec: ParamSpec, value: Any):
 
 
 def source_fingerprint(src: str, options: CompileOptions) -> str:
-    """Content hash keying the program cache: source text + options."""
+    """Content hash of (raw source text, options).
+
+    Kept for compatibility; the program cache itself is keyed on
+    :func:`program_fingerprint` (the canonical *MIR* hash) so the embedded
+    and text front-ends share entries.
+    """
     h = hashlib.sha256()
     h.update(src.encode("utf-8"))
+    h.update(b"\x00")
+    h.update(repr(options).encode("utf-8"))
+    return h.hexdigest()
+
+
+def program_fingerprint(mir_key: str, options: CompileOptions) -> str:
+    """Cache key of a compiled Program: canonical MIR hash + options."""
+    h = hashlib.sha256()
+    h.update(mir_key.encode("ascii"))
     h.update(b"\x00")
     h.update(repr(options).encode("utf-8"))
     return h.hexdigest()
@@ -98,6 +164,10 @@ class Program:
     and the declared run-time parameters. Bind it to as many graphs and
     backends as you like; each :meth:`bind` returns an isolated
     :class:`~repro.core.session.Session`.
+
+    ``source`` is always ``.gt`` text: for embedded programs it is the
+    :meth:`~repro.frontend.GraphProgram.to_source` emission, so every
+    compiled artifact can be re-ingested by the text front-end.
     """
 
     def __init__(self, module: mir.Module, options: CompileOptions,
@@ -174,41 +244,115 @@ class Program:
 # content-hashed program cache
 # ---------------------------------------------------------------------------
 
-# keyed by source_fingerprint(src, options) — the hash already folds the
-# options repr in, so the string alone discriminates every (src, opts) pair
+# keyed by program_fingerprint(mir_key, options): the canonical MIR hash
+# folds in every semantic detail of the program while being front-end
+# independent, so `compile(text)` and `compile(embedded_twin)` alias
 _PROGRAM_CACHE: Dict[str, Program] = {}
-# the analyzed MIR module is options-independent: cache it on the source
-# hash alone so ablation sweeps over options don't re-run the front-end
+# the analyzed MIR module is options-independent: cache it on the MIR
+# fingerprint alone so ablation sweeps over options don't re-run analysis
 _MODULE_CACHE: Dict[str, mir.Module] = {}
+# memo: sha256(raw text) -> MIR fingerprint, so recompiling the same text
+# string skips the lexer/parser/analyzer entirely
+_TEXT_KEYS: Dict[str, str] = {}
 _CACHE_LOCK = threading.Lock()
 
 
-def compile_program(src: str, options: Optional[CompileOptions] = None) -> Program:
-    """Compile DSL source into a :class:`Program` (cached).
-
-    The cache key is a content hash of (source, options): the same text
-    always returns the same artifact, different options recompile.
-    """
-    if not isinstance(src, str):
-        raise ProgramError(f"expected DSL source text, got {type(src).__name__}")
-    opts = options if options is not None else CompileOptions()
-    key = source_fingerprint(src, opts)
+def _analyze_text(src: str) -> Tuple[mir.Module, str]:
+    """Text front-end: source -> (analyzed module, MIR fingerprint)."""
     src_key = hashlib.sha256(src.encode("utf-8")).hexdigest()
     with _CACHE_LOCK:
+        mir_key = _TEXT_KEYS.get(src_key)
+        module = _MODULE_CACHE.get(mir_key) if mir_key else None
+    if module is not None:
+        return module, mir_key
+    try:
+        fir_prog = parse(src)
+    except (LexError, ParseError) as e:
+        raise _front_end_error(e, src) from e
+    try:
+        module = semantic.analyze(fir_prog)
+    except semantic.SemanticError as e:
+        raise _front_end_error(e, src) from e
+    mir_key = mir.fingerprint(module)
+    with _CACHE_LOCK:
+        # another thread may have raced us; keep the first base module
+        module = _MODULE_CACHE.setdefault(mir_key, module)
+        _TEXT_KEYS[src_key] = mir_key
+    return module, mir_key
+
+
+def _analyze_embedded(gp: "GraphProgram") -> Tuple[mir.Module, str, str]:
+    """Embedded front-end: GraphProgram -> (module, MIR key, .gt source).
+
+    The (MIR key, source) pair is memoized on the GraphProgram itself
+    (``_identity``, invalidated by new declarations), so repeated compiles
+    of the same builder skip to_fir/analyze/dump — the embedded analogue
+    of the text path's ``_TEXT_KEYS`` memo.
+    """
+    ident = getattr(gp, "_identity", None)
+    if ident is not None:
+        mir_key, source_text = ident
+        with _CACHE_LOCK:
+            module = _MODULE_CACHE.get(mir_key)
+        if module is not None:
+            return module, mir_key, source_text
+    from ..frontend.lowering import FrontendError  # deferred: no cycle at load
+
+    try:
+        fir_prog = gp.to_fir()
+        source_text = gp.to_source()
+    except FrontendError as e:
+        raise ProgramError(f"embedded program {gp.name!r}: {e}") from e
+    try:
+        module = semantic.analyze(fir_prog)
+    except semantic.SemanticError as e:
+        line = getattr(e, "line", 0) or 0
+        raise ProgramError(
+            f"embedded program {gp.name!r}: {e}"
+            + (f" (Python source line {line})" if line else ""),
+            line,
+        ) from e
+    mir_key = mir.fingerprint(module)
+    with _CACHE_LOCK:
+        module = _MODULE_CACHE.setdefault(mir_key, module)
+    try:
+        gp._identity = (mir_key, source_text)
+    except AttributeError:  # pragma: no cover - exotic duck types
+        pass
+    return module, mir_key, source_text
+
+
+def compile_program(
+    src: "str | GraphProgram", options: Optional[CompileOptions] = None
+) -> Program:
+    """Compile DSL source — text or embedded — into a :class:`Program`.
+
+    ``src`` is either a ``.gt`` source string or a
+    :class:`repro.frontend.GraphProgram`. The cache key is a content hash
+    of the canonical serialized MIR plus the options: the same program
+    always returns the same artifact no matter which front-end authored
+    it, and different options recompile.
+    """
+    if isinstance(src, str):
+        module, mir_key = _analyze_text(src)
+        source_text = src
+    elif hasattr(src, "to_fir") and hasattr(src, "to_source"):
+        module, mir_key, source_text = _analyze_embedded(src)
+    else:
+        raise ProgramError(
+            f"expected DSL source text or a GraphProgram, got {type(src).__name__}"
+        )
+    opts = options if options is not None else CompileOptions()
+    key = program_fingerprint(mir_key, opts)
+    with _CACHE_LOCK:
         prog = _PROGRAM_CACHE.get(key)
-        module = _MODULE_CACHE.get(src_key)
     if prog is not None:
         return prog
-    if module is None:
-        module = semantic.analyze(parse(src))
-        with _CACHE_LOCK:
-            # another thread may have raced us; keep the first base module
-            module = _MODULE_CACHE.setdefault(src_key, module)
     # the MIR optimization pipeline (CompileOptions.passes) specializes the
     # options-independent base module per option set; it works on a copy,
     # so the cached base stays pristine for other option sets
     optimized = passes.run_pipeline(module, opts)
-    prog = Program(optimized, opts, key, src)
+    prog = Program(optimized, opts, key, source_text)
     with _CACHE_LOCK:
         prog = _PROGRAM_CACHE.setdefault(key, prog)
     return prog
@@ -224,6 +368,7 @@ def clear_program_cache() -> None:
     with _CACHE_LOCK:
         _PROGRAM_CACHE.clear()
         _MODULE_CACHE.clear()
+        _TEXT_KEYS.clear()
 
 
 def program_cache_size() -> int:

@@ -28,7 +28,20 @@ HOST_BUILTINS = {"load": None, "swap": 2, "print": None, "argv": None}
 
 
 class SemanticError(Exception):
-    pass
+    """Semantic error carrying the 1-based source ``line`` of the offending
+    FIR node (column information is not tracked past the parser). For
+    programs built by the embedded front-end the line is the Python line
+    number of the offending decorated-function statement."""
+
+    def __init__(self, msg: str, line: int = 0):
+        super().__init__(msg)
+        self.line = line
+
+
+def _serr(msg: str, node) -> SemanticError:
+    line = getattr(node, "line", 0) or 0
+    prefix = f"line {line}: " if line else ""
+    return SemanticError(prefix + msg, line)
 
 
 def _index_pattern(idx: fir.Expr, k: mir.Kernel, loop_vars: Set[str]) -> mir.IndexPattern:
@@ -65,7 +78,7 @@ class Analyzer:
             t = c.type
             if isinstance(t, fir.EdgesetType):
                 if t.element not in elements:
-                    raise SemanticError(f"line {c.line}: unknown element {t.element!r}")
+                    raise _serr(f"unknown element {t.element!r}", c)
                 load_args: List[fir.Expr] = []
                 if isinstance(c.init, fir.Call) and c.init.func == "load":
                     load_args = c.init.args
@@ -80,7 +93,7 @@ class Analyzer:
                 vertexset_name = c.name
             elif isinstance(t, fir.VectorType):
                 if t.element not in elements:
-                    raise SemanticError(f"line {c.line}: unknown element {t.element!r}")
+                    raise _serr(f"unknown element {t.element!r}", c)
                 is_edge = t.element.lower().startswith("edge")
                 properties[c.name] = mir.PropertyInfo(c.name, t.element, t.scalar, is_edge)
                 if isinstance(c.init, fir.MethodCall) and c.init.method in (
@@ -91,7 +104,7 @@ class Analyzer:
             elif isinstance(t, fir.ScalarType):
                 scalars[c.name] = mir.ScalarInfo(c.name, t.kind, c.init)
             else:
-                raise SemanticError(f"line {c.line}: unsupported const type {t}")
+                raise _serr(f"unsupported const type {t}", c)
 
         if graph is None:
             raise SemanticError("program declares no edgeset")
@@ -148,13 +161,11 @@ class Analyzer:
             if len(f.params) == 3:
                 t2 = ptypes[2]
                 if not (isinstance(t2, fir.ScalarType) and t2.kind in ("int", "float")):
-                    raise SemanticError(
-                        f"line {f.line}: edge weight param must be int/float"
-                    )
+                    raise _serr("edge weight param must be int/float", f)
                 if not module.graph.weighted:
-                    raise SemanticError(
-                        f"line {f.line}: weighted edge function {f.name!r} on an "
-                        "unweighted edgeset"
+                    raise _serr(
+                        f"weighted edge function {f.name!r} on an "
+                        "unweighted edgeset", f
                     )
                 wp = f.params[2].name
             k = mir.Kernel(
@@ -166,9 +177,9 @@ class Analyzer:
                 weight_param=wp,
             )
             return mir.KernelKind.EDGE, k
-        raise SemanticError(
-            f"line {f.line}: cannot classify function {f.name!r} "
-            f"(params must be (Vertex), (Vertex, Vertex[, int|float]), or ())"
+        raise _serr(
+            f"cannot classify function {f.name!r} "
+            f"(params must be (Vertex), (Vertex, Vertex[, int|float]), or ())", f
         )
 
     # ------------------------------------------------------------------
@@ -239,9 +250,9 @@ class Analyzer:
                 walk_expr(e.index)
             elif isinstance(e, fir.Call):
                 if e.func in DEVICE_BUILTINS and DEVICE_BUILTINS[e.func] != len(e.args):
-                    raise SemanticError(
-                        f"line {e.line}: builtin {e.func}() takes "
-                        f"{DEVICE_BUILTINS[e.func]} args, got {len(e.args)}"
+                    raise _serr(
+                        f"builtin {e.func}() takes "
+                        f"{DEVICE_BUILTINS[e.func]} args, got {len(e.args)}", e
                     )
                 for a in e.args:
                     walk_expr(a)
@@ -265,7 +276,7 @@ class Analyzer:
                     k.writes_weight = True
                     return
                 return  # local variable
-            raise SemanticError(f"line {line}: unsupported write target")
+            raise SemanticError(f"line {line}: unsupported write target", line)
 
         def walk_stmts(body: List[fir.Stmt]):
             for st in body:
@@ -291,14 +302,12 @@ class Analyzer:
                         walk_stmts(st.body)
                         loop_vars.discard(st.var)
                     else:
-                        raise SemanticError(
-                            f"line {st.line}: device for-loops must iterate "
-                            "v.getNeighbors()/v.getInNeighbors()"
+                        raise _serr(
+                            "device for-loops must iterate "
+                            "v.getNeighbors()/v.getInNeighbors()", st
                         )
                 elif isinstance(st, fir.While):
-                    raise SemanticError(
-                        f"line {st.line}: while loops are host-only constructs"
-                    )
+                    raise _serr("while loops are host-only constructs", st)
                 elif isinstance(st, fir.ExprStmt):
                     walk_expr(st.expr)
 

@@ -1,0 +1,575 @@
+"""Embedded front-end tests: GraphProgram builder, AST lowering, the
+`.gt` round-trip (embedded -> to_source -> parse -> identical MIR hash)
+for every supported construct, the shared MIR-keyed Program cache, the
+embedded-vs-text equivalence matrix on both backends with passes on/off,
+and front-end diagnostics (Python file/lineno for embedded, line/col
+excerpts for text)."""
+import numpy as np
+import pytest
+
+import repro
+from repro.algorithms import sources
+from repro.algorithms.embedded import (
+    BFS_ECP_EMBEDDED,
+    PAGERANK_EMBEDDED,
+    build_bfs_ecp,
+    build_pagerank,
+)
+from repro.core import CompileOptions, analyze, mir, parse
+from repro.core.program import ProgramError, clear_program_cache, compile_program
+from repro.frontend import (
+    FrontendError,
+    GraphProgram,
+    exp,
+    leakyrelu,
+    sigmoid,
+    swap,
+    to_float,
+)
+from repro.graph import generators
+
+
+def roundtrip_fingerprint(p: GraphProgram) -> None:
+    """embedded -> to_source() -> parse -> analyze must be MIR-hash
+    identical to analyzing the builder's FIR directly."""
+    direct = p.fingerprint()
+    via_text = mir.fingerprint(analyze(parse(p.to_source())))
+    assert direct == via_text, (
+        "round-trip fingerprint mismatch:\n" + p.to_source()
+    )
+
+
+def base_program(name="t"):
+    """A minimal program skeleton: edgeset, vertexset, one int prop."""
+    p = GraphProgram(name)
+    edges = p.edgeset("edges")
+    vertices = p.vertexset("vertices")
+    prop = p.vertex_prop("val", int)
+    return p, edges, vertices, prop
+
+
+# ---------------------------------------------------------------------------
+# round-trip property tests: one per supported construct
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_arithmetic_and_unary():
+    p, edges, vertices, val = base_program()
+    out = p.vertex_prop("out", int)
+
+    @p.vertex_kernel
+    def k(v):
+        out[v] = (val[v] + 2) * 3 - val[v] / 2
+        val[v] = -out[v]
+
+    @p.main
+    def main():
+        vertices.process(k)
+
+    roundtrip_fingerprint(p)
+
+
+def test_roundtrip_all_comparisons_and_boolops():
+    p, edges, vertices, val = base_program()
+    flag = p.vertex_prop("flag", int)
+
+    @p.vertex_kernel
+    def k(v):
+        if (val[v] == 0) or (val[v] != 1) and (val[v] < 5):
+            flag[v] = 1
+        if (val[v] <= 2) and (val[v] > -3) or (val[v] >= 7):
+            flag[v] = 2
+        if not (val[v] == 4):
+            flag[v] = 3
+
+    @p.main
+    def main():
+        vertices.process(k)
+
+    roundtrip_fingerprint(p)
+
+
+def test_roundtrip_reductions():
+    p, edges, vertices, val = base_program()
+    lo = p.vertex_prop("lo", int)
+    hi = p.vertex_prop("hi", int)
+
+    @p.edge_kernel
+    def k(src, dst):
+        lo[dst] = min(lo[dst], val[src])
+        hi[dst] = max(val[src], hi[dst])  # reversed args also recognized
+        val[dst] += 1
+        lo[dst] -= 2
+        hi[dst] *= 3
+
+    @p.main
+    def main():
+        edges.process(k)
+
+    # min/max spelled as calls must lower to the DSL reduce statements
+    src_text = p.to_source()
+    assert "lo[dst] min= val[src];" in src_text
+    assert "hi[dst] max= val[src];" in src_text
+    roundtrip_fingerprint(p)
+
+
+def test_roundtrip_if_elif_else():
+    p, edges, vertices, val = base_program()
+
+    @p.vertex_kernel
+    def k(v):
+        if val[v] == 0:
+            val[v] = 1
+        elif val[v] == 1:
+            val[v] = 2
+        else:
+            val[v] = 3
+
+    @p.main
+    def main():
+        vertices.process(k)
+
+    roundtrip_fingerprint(p)
+
+
+def test_roundtrip_accumulator_and_const_index():
+    p, edges, vertices, val = base_program()
+    total = p.vertex_prop("total", int)
+
+    @p.edge_kernel
+    def k(src, dst):
+        val[dst] += 1
+        total[0] = total[0] + 1  # normalizes to += in both front-ends
+
+    @p.main
+    def main():
+        edges.process(k)
+
+    roundtrip_fingerprint(p)
+    kern = analyze(p.to_fir()).kernels["k"]
+    assert "total" in kern.accumulators
+
+
+def test_roundtrip_neighbor_loop():
+    p, edges, vertices, val = base_program()
+    acc = p.vertex_prop("acc", int)
+
+    @p.vertex_kernel
+    def gather(v):
+        for ngh in v.getNeighbors():
+            acc[ngh] = min(acc[ngh], val[v])
+
+    @p.main
+    def main():
+        vertices.process(gather)
+
+    roundtrip_fingerprint(p)
+    assert analyze(p.to_fir()).kernels["gather"].has_neighbor_loop
+
+
+def test_roundtrip_weighted_edges_and_weight_write():
+    p = GraphProgram("w")
+    edges = p.edgeset("edges", weight=float)
+    vertices = p.vertexset("vertices")
+    feat = p.vertex_prop("feat", float)
+
+    @p.edge_kernel
+    def score(src, dst, weight):
+        weight = leakyrelu(feat[src] + feat[dst], 0.2)
+
+    @p.main
+    def main():
+        edges.process(score)
+
+    roundtrip_fingerprint(p)
+    assert analyze(p.to_fir()).kernels["score"].writes_weight
+
+
+def test_roundtrip_builtins_and_captured_constants():
+    eps = 0.25  # captured Python float, inlined as a literal
+    p = GraphProgram("b")
+    p.edgeset("edges")
+    vertices = p.vertexset("vertices")
+    x = p.vertex_prop("x", float)
+
+    @p.vertex_kernel
+    def k(v):
+        x[v] = sigmoid(exp(to_float(vertices.size()))) + abs(x[v]) - eps
+
+    @p.main
+    def main():
+        vertices.process(k)
+
+    assert "0.25" in p.to_source()
+    roundtrip_fingerprint(p)
+
+
+def test_roundtrip_host_control_flow_and_swap():
+    p = GraphProgram("h")
+    p.edgeset("edges")
+    vertices = p.vertexset("vertices")
+    a = p.vertex_prop("a", float)
+    b = p.vertex_prop("b", float)
+    iters = p.scalar("iters", int, init=3)
+    thresh = p.scalar("thresh", float)  # required parameter (no init)
+
+    @p.vertex_kernel
+    def step(v):
+        if a[v] > thresh:
+            b[v] = a[v] * 0.5
+
+    @p.main
+    def main():
+        vertices.init(step)
+        i: int = 0
+        while i < iters:
+            vertices.process(step)
+            swap(a, b)
+            i = i + 1
+
+    roundtrip_fingerprint(p)
+    prog = compile_program(p)
+    assert prog.params["thresh"].required
+    assert not prog.params["iters"].required
+
+
+def test_roundtrip_host_helper_and_degrees_and_path():
+    p = GraphProgram("d")
+    edges = p.edgeset("edges", path="graph.el")
+    vertices = p.vertexset("vertices")
+    deg = p.vertex_prop("deg", int, init=edges.out_degrees())
+    indeg = p.vertex_prop("indeg", int, init=edges.in_degrees())
+
+    @p.vertex_kernel
+    def k(v):
+        deg[v] = deg[v] + indeg[v]
+
+    @p.host
+    def helper():
+        vertices.process(k)
+
+    @p.main
+    def main():
+        helper()
+
+    assert 'load("graph.el")' in p.to_source()
+    roundtrip_fingerprint(p)
+    mod = analyze(p.to_fir())
+    assert mod.degree_props == {"deg": "out", "indeg": "in"}
+    assert "helper" in mod.host.host_funcs
+
+
+def test_roundtrip_edge_prop():
+    p = GraphProgram("ep")
+    p.edgeset("edges")
+    vertices = p.vertexset("vertices")
+    p.edge_prop("mark", int)
+    val = p.vertex_prop("val", int)
+
+    @p.vertex_kernel
+    def k(v):
+        val[v] = 0
+
+    @p.main
+    def main():
+        vertices.process(k)
+
+    roundtrip_fingerprint(p)
+    mod = analyze(p.to_fir())
+    assert mod.properties["mark"].is_edge
+    assert mod.memory.buffers["mark"][0] == "E"
+
+
+def test_python_name_independent_of_dsl_name():
+    p = GraphProgram("n")
+    p.edgeset("edges")
+    v_ = p.vertexset("vertices")
+    renamed = p.vertex_prop("tuple", int)  # DSL name is a Python builtin
+
+    @p.vertex_kernel
+    def k(v):
+        renamed[v] = 0
+
+    @p.main
+    def main():
+        v_.process(k)
+
+    assert "tuple[v] = 0;" in p.to_source()
+    roundtrip_fingerprint(p)
+
+
+# ---------------------------------------------------------------------------
+# twins: fingerprints, shared cache, equivalence matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.power_law(300, 2000, seed=7)
+
+
+def test_twins_match_text_fingerprints():
+    for embedded, text in [
+        (BFS_ECP_EMBEDDED, sources.BFS_ECP),
+        (PAGERANK_EMBEDDED, sources.PAGERANK),
+    ]:
+        assert embedded.fingerprint() == mir.fingerprint(analyze(parse(text)))
+        roundtrip_fingerprint(embedded)
+
+
+def test_builders_produce_fresh_equal_programs():
+    assert build_bfs_ecp().fingerprint() == BFS_ECP_EMBEDDED.fingerprint()
+    assert build_pagerank().fingerprint() == PAGERANK_EMBEDDED.fingerprint()
+
+
+def test_embedded_and_text_share_one_cache_entry():
+    clear_program_cache()
+    p_emb = repro.compile(BFS_ECP_EMBEDDED)
+    p_txt = repro.compile(sources.BFS_ECP)
+    assert p_emb is p_txt  # one artifact, two front-ends
+    # distinct options still recompile
+    p_opt = repro.compile(BFS_ECP_EMBEDDED, CompileOptions(passes="none"))
+    assert p_opt is not p_emb
+
+
+def test_cache_normalizes_cosmetic_text_differences():
+    clear_program_cache()
+    a = repro.compile(sources.BFS_ECP)
+    b = repro.compile(sources.BFS_ECP + "\n% trailing comment\n")
+    assert a is b
+
+
+@pytest.mark.parametrize("passes", ["default", "none"])
+@pytest.mark.parametrize("backend", ["local", "distributed"])
+def test_equivalence_matrix_bfs(graph, backend, passes):
+    opts = CompileOptions(passes=passes)
+    clear_program_cache()
+    r_emb = repro.compile(BFS_ECP_EMBEDDED, opts).bind(
+        graph, backend=backend).run(root=3)
+    clear_program_cache()  # force an independent compile of the text twin
+    r_txt = repro.compile(sources.BFS_ECP, opts).bind(
+        graph, backend=backend).run(root=3)
+    np.testing.assert_array_equal(
+        r_emb.properties["old_level"], r_txt.properties["old_level"])
+
+
+@pytest.mark.parametrize("passes", ["default", "none"])
+@pytest.mark.parametrize("backend", ["local", "distributed"])
+def test_equivalence_matrix_pagerank(graph, backend, passes):
+    opts = CompileOptions(passes=passes)
+    clear_program_cache()
+    r_emb = repro.compile(PAGERANK_EMBEDDED, opts).bind(
+        graph, backend=backend).run(iters=5)
+    clear_program_cache()
+    r_txt = repro.compile(sources.PAGERANK, opts).bind(
+        graph, backend=backend).run(iters=5)
+    np.testing.assert_array_equal(
+        r_emb.properties["rank"], r_txt.properties["rank"])
+
+
+def test_runners_accept_embedded_source(graph):
+    from repro.algorithms import run_bfs, run_pagerank
+
+    lv_emb, _ = run_bfs(graph, root=3, source=BFS_ECP_EMBEDDED)
+    lv_txt, _ = run_bfs(graph, root=3)
+    np.testing.assert_array_equal(lv_emb, lv_txt)
+    pr_emb, _ = run_pagerank(graph, iters=5, source=PAGERANK_EMBEDDED)
+    pr_txt, _ = run_pagerank(graph, iters=5)
+    np.testing.assert_array_equal(pr_emb, pr_txt)
+
+
+def test_runner_argv_is_fresh_per_bind(graph):
+    """A caller mutating its session's argv must not poison later binds."""
+    from repro.algorithms import runners
+
+    assert isinstance(runners._ARGV, tuple)
+    prog = compile_program(sources.WCC)
+    s1 = prog.bind(graph, argv=list(runners._ARGV))
+    s1.backend.engine.argv.append("poison")
+    s2 = prog.bind(graph, argv=list(runners._ARGV))
+    assert "poison" not in s2.backend.engine.argv
+
+
+# ---------------------------------------------------------------------------
+# diagnostics: embedded errors carry Python file/lineno, text errors
+# carry line/col + a caret excerpt
+# ---------------------------------------------------------------------------
+
+
+def test_embedded_error_reports_python_location():
+    p, edges, vertices, val = base_program()
+    with pytest.raises(FrontendError) as ei:
+        @p.vertex_kernel
+        def bad(v):
+            val[v] = undeclared_name  # noqa: F821
+    assert ei.value.filename and ei.value.filename.endswith(".py")
+    assert ei.value.lineno is not None
+    assert "undeclared_name" in str(ei.value)
+    assert f"{ei.value.filename}:{ei.value.lineno}" in str(ei.value)
+
+
+def test_embedded_rejects_unsupported_python():
+    p, edges, vertices, val = base_program()
+    with pytest.raises(FrontendError, match="return"):
+        @p.vertex_kernel
+        def k1(v):
+            return val[v]
+    with pytest.raises(FrontendError, match="chained"):
+        @p.vertex_kernel
+        def k2(v):
+            if 0 < val[v] < 5:
+                val[v] = 1
+    with pytest.raises(FrontendError, match="undeclared"):
+        @p.main
+        def m():
+            x = 1  # missing `x: int = 1` annotation
+    with pytest.raises(FrontendError, match="builtin"):
+        @p.vertex_kernel
+        def k3(v):
+            val[v] = len(val)  # arbitrary Python calls don't lower
+
+
+def test_embedded_builder_misuse():
+    p, edges, vertices, val = base_program()
+    with pytest.raises(FrontendError, match="duplicate"):
+        p.vertex_prop("val", int)
+    with pytest.raises(FrontendError, match="keyword"):
+        p.vertex_prop("while", int)
+    with pytest.raises(FrontendError, match="one edgeset"):
+        p.edgeset("edges2")
+    with pytest.raises(FrontendError, match="unweighted"):
+        @p.edge_kernel
+        def k(src, dst, weight):
+            weight = 1.0
+    # handles and builtin stubs are not executable Python
+    with pytest.raises(FrontendError, match="outside a decorated kernel"):
+        val[0]
+    with pytest.raises(FrontendError, match="device builtin"):
+        to_float(1)
+
+    @p.vertex_kernel
+    def ok(v):
+        val[v] = 0
+
+    with pytest.raises(FrontendError, match="not directly callable"):
+        ok(3)
+
+    @p.main
+    def main():
+        vertices.process(ok)
+
+    with pytest.raises(FrontendError, match="already has a @main"):
+        @p.main
+        def main2():
+            vertices.process(ok)
+
+
+def test_embedded_program_without_main_fails():
+    p, edges, vertices, val = base_program()
+    with pytest.raises(FrontendError, match="no @main"):
+        p.to_fir()
+
+
+def test_embedded_semantic_error_becomes_programerror():
+    p, edges, vertices, val = base_program()
+
+    @p.vertex_kernel
+    def k(v):
+        while val[v] > 0:  # while is host-only: semantic rejection
+            val[v] = 0
+
+    @p.main
+    def main():
+        vertices.process(k)
+
+    with pytest.raises(ProgramError, match="host-only"):
+        compile_program(p)
+
+
+def test_text_parse_error_has_line_col_and_excerpt():
+    bad = "element Vertex end\nelement Edge end\nconst x int = 1;\n"
+    with pytest.raises(ProgramError) as ei:
+        repro.compile(bad)
+    assert ei.value.line == 3 and ei.value.col == 9
+    msg = str(ei.value)
+    assert "const x int = 1;" in msg and "^" in msg
+
+
+def test_text_lex_error_has_location():
+    with pytest.raises(ProgramError) as ei:
+        repro.compile("element Vertex end\nconst $bad: int = 1;\n")
+    assert ei.value.line == 2
+    assert "^" in str(ei.value)
+
+
+def test_text_semantic_error_surfaces_line():
+    bad = """
+element Vertex end
+element Edge end
+const edges: edgeset{Edge}(Vertex, Vertex) = load(argv[1]);
+const vertices: vertexset{Vertex} = edges.getVertices();
+const acc: vector{Vertex}(int);
+func k(src: Vertex, dst: Vertex, w: int)
+    acc[dst] += w;
+end
+func main()
+    edges.process(k);
+end
+"""
+    with pytest.raises(ProgramError) as ei:
+        repro.compile(bad)
+    assert "unweighted" in str(ei.value)
+    assert ei.value.line == 7
+    assert "func k(src: Vertex, dst: Vertex, w: int)" in str(ei.value)
+
+
+def test_compile_rejects_non_source():
+    with pytest.raises(ProgramError, match="GraphProgram"):
+        repro.compile(42)
+
+
+def test_cross_program_handle_rejected():
+    p1 = GraphProgram("one")
+    p1.edgeset("edges")
+    p1.vertexset("vertices")
+    foreign = p1.vertex_prop("rank", float)
+
+    p2, edges2, vertices2, val2 = base_program("two")
+    with pytest.raises(FrontendError, match="belongs to GraphProgram 'one'"):
+        @p2.vertex_kernel
+        def k(v):
+            val2[v] = 0
+            foreign[v] = 1.0  # p1's handle inside a p2 kernel
+
+
+def test_compile_wraps_builder_errors_as_programerror():
+    p, edges, vertices, val = base_program()  # no @main yet
+    with pytest.raises(ProgramError, match="no @main"):
+        repro.compile(p)
+
+
+def test_edgeset_path_rejects_unescapable_strings():
+    p = GraphProgram("bad")
+    with pytest.raises(FrontendError, match="escape"):
+        p.edgeset("edges", path='a"b')
+
+
+def test_embedded_identity_memo_and_invalidation():
+    p, edges, vertices, val = base_program()
+
+    @p.vertex_kernel
+    def k(v):
+        val[v] = 0
+
+    @p.main
+    def main():
+        vertices.process(k)
+
+    clear_program_cache()
+    a = repro.compile(p)
+    assert p._identity is not None  # memoized after the first compile
+    assert repro.compile(p) is a  # repeat hits the memo + program cache
+    # a new declaration invalidates the memo: recompile sees the change
+    extra = p.vertex_prop("extra", int)
+    assert p._identity is None
+    assert extra.name in repro.compile(p, CompileOptions(passes="none")).source
