@@ -6,13 +6,20 @@ Two modes:
 * measure (default): runs the benchmark subset and writes ``BENCH_ci.json``
   with, per workload, the cold compile+first-run wall time, the steady-state
   (warm session) wall time, and the kernel-launch reduction achieved by the
-  MIR pass pipeline (passes on vs off).
+  MIR pass pipeline (passes on vs off). A second ``batched`` section times
+  K parameterized queries answered sequentially vs through one
+  ``BatchSession`` execution (bfs_batched64: 64 BFS roots; pagerank_batched8:
+  8 query batches) and records the wall-time speedup plus the launch ratio.
 
 * ``--check``: compares a freshly written ``BENCH_ci.json`` against the
   committed ``BENCH_baseline.json`` and exits non-zero when any workload's
   compile+run or steady-state wall time regressed by more than
-  ``--threshold`` (default 1.5x), or when the pass pipeline's launch
-  reduction fell below the acceptance floor of 1.3x.
+  ``--threshold`` (default 1.5x), when the pass pipeline's launch
+  reduction fell below the acceptance floor of 1.3x, or when a batched
+  workload's batched-vs-sequential speedup fell below its recorded floor
+  (2x for bfs_batched64 at K=64). Speedups and launch ratios are measured
+  within one run, so the batched gates are machine-independent and always
+  fatal.
 
 Wall-time comparisons are only meaningful between similar machines, so
 the gate self-arms: while the committed baseline's ``meta.source`` is
@@ -58,6 +65,58 @@ def _workloads():
         "bfs_embedded": (embedded.build_bfs_ecp(), g_bfs, {"root": bfs_root}),
         "pagerank": (sources.PAGERANK, g_pr, {"iters": 10}),
     }
+
+
+def _batched_workloads():
+    import numpy as np
+
+    from repro.algorithms import sources
+    from repro.graph import generators
+
+    g_bfs = generators.power_law(2000, 16000, seed=0)
+    g_pr = generators.power_law(2000, 16000, seed=1)
+    rng = np.random.default_rng(3)
+    bfs_sets = [{"root": int(r)} for r in rng.integers(0, g_bfs.n_vertices, 64)]
+    pr_sets = [{"iters": int(i)} for i in rng.integers(8, 14, 8)]
+    # name -> (source, graph, param sets, fatal speedup floor or None)
+    return {
+        "bfs_batched64": (sources.BFS_ECP, g_bfs, bfs_sets, 2.0),
+        "pagerank_batched8": (sources.PAGERANK, g_pr, pr_sets, None),
+    }
+
+
+def _time_batched(src, graph, param_sets, floor):
+    """Warm sequential-vs-batched wall times for one K-query workload."""
+    import repro
+    from repro.core.program import clear_program_cache
+
+    clear_program_cache()
+    program = repro.compile(src)
+    session = program.bind(graph)
+    batch = program.bind_batch(graph)
+    # warm both paths (jit compilation out of the measurement)
+    session.run(**param_sets[0])
+    batch.run_many(param_sets)
+    t0 = time.perf_counter()
+    seq_results = [session.run(**p) for p in param_sets]
+    seq_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bat_results = batch.run_many(param_sets)
+    bat_s = time.perf_counter() - t0
+    seq_launches = sum(r.stats.total_launches for r in seq_results)
+    bat_launches = bat_results[0].stats.total_launches
+    out = {
+        "k": len(param_sets),
+        "sequential_s": round(seq_s, 4),
+        "batched_s": round(bat_s, 4),
+        "batched_speedup": round(seq_s / max(bat_s, 1e-9), 3),
+        "launches_sequential": seq_launches,
+        "launches_batched": bat_launches,
+        "launch_ratio": round(bat_launches / max(seq_launches, 1), 4),
+    }
+    if floor is not None:
+        out["speedup_floor"] = floor
+    return out
 
 
 def _time_workload(src, graph, params, options):
@@ -107,6 +166,9 @@ def measure() -> dict:
             "launch_reduction": round(launches_off / max(launches_on, 1), 3),
             "fused_launches": stats_on.fused_launches,
         }
+    out["batched"] = {}
+    for name, (src, graph, sets, floor) in _batched_workloads().items():
+        out["batched"][name] = _time_batched(src, graph, sets, floor)
     return out
 
 
@@ -168,6 +230,29 @@ def check(ci: dict, baseline: dict, threshold: float) -> int:
         else:
             print(f"ok   {name}.launch_reduction: {lr:.2f}x "
                   f"(floor {LAUNCH_REDUCTION_FLOOR}x)")
+    # batched execution gates: the speedup and launch ratios are measured
+    # within one run (same machine for both sides), so floors are fatal
+    # regardless of where the baseline came from
+    base_batched = baseline.get("batched", {})
+    ci_batched = ci.get("batched", {})
+    for name in sorted(set(ci_batched) - set(base_batched)):
+        failures.append(
+            f"{name}: batched workload measured but absent from the baseline "
+            f"— refresh BENCH_baseline.json to gate it"
+        )
+    for name in sorted(base_batched):
+        got = ci_batched.get(name)
+        if got is None:
+            failures.append(f"{name}: batched workload missing from current run")
+            continue
+        speedup = got.get("batched_speedup", 0.0)
+        floor = got.get("speedup_floor") or base_batched[name].get("speedup_floor")
+        line = (f"{name}.batched_speedup: {speedup:.2f}x over sequential "
+                f"(K={got.get('k')}, launch_ratio={got.get('launch_ratio')})")
+        if floor is not None and speedup < floor:
+            failures.append(f"REGRESSION {line} < {floor}x acceptance floor")
+        else:
+            print(f"ok   {line}")
     for w in warnings:
         print(w)
     for f in failures:

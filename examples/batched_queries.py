@@ -1,0 +1,75 @@
+"""Quickstart for batched multi-query execution: one compiled program, one
+resident graph, K parameterized queries per launch set.
+
+    PYTHONPATH=src python examples/batched_queries.py
+
+`Session.run` answers one query per execution; `program.bind_batch(graph)`
+returns a `BatchSession` whose `run_many` answers a whole list of
+parameter bindings at once — properties gain a leading batch axis, host
+control flow runs with per-query active masks (queries that converge early
+stop contributing work), and BFS-like frontier programs automatically take
+the bit-packed multi-source path (up to 64 roots per traversal word).
+Results are bit-identical to sequential runs; only the launch count and
+wall time change. `Session.run_many` reroutes batch-eligible lists through
+the same machinery automatically.
+"""
+import time
+
+import numpy as np
+
+import repro
+from repro.algorithms import sources
+from repro.graph import generators
+
+graph = generators.power_law(2000, 16000, seed=0)
+rng = np.random.default_rng(7)
+
+# ---- 64-root BFS: the bit-packed multi-source fast path ------------------
+bfs = repro.compile(sources.BFS_ECP)
+roots = [{"root": int(r)} for r in rng.integers(0, graph.n_vertices, 64)]
+
+session = bfs.bind(graph)
+session.run(**roots[0])  # warm the sequential path (jit compile)
+t0 = time.perf_counter()
+seq = [session.run(**p) for p in roots]
+seq_s = time.perf_counter() - t0
+
+batch = bfs.bind_batch(graph)
+batch.run_many(roots)  # warm the batched path
+t0 = time.perf_counter()
+bat = batch.run_many(roots)
+bat_s = time.perf_counter() - t0
+
+assert all(
+    np.array_equal(a.properties["old_level"], b.properties["old_level"])
+    for a, b in zip(seq, bat)
+), "batched results must be bit-identical to sequential runs"
+seq_launches = sum(r.stats.total_launches for r in seq)
+print(f"BFS x64 roots: sequential {seq_s:.3f}s ({seq_launches} launches) "
+      f"-> batched {bat_s:.3f}s ({bat[0].stats.total_launches} launches, "
+      f"{seq_s / bat_s:.1f}x faster, batch_size={bat[0].stats.batch_size})")
+
+# ---- 8-seed personalized PageRank: the generic vmapped path --------------
+ppr = repro.compile(sources.PPR)
+seeds = [{"source": int(s)} for s in rng.integers(0, graph.n_vertices, 8)]
+
+session = ppr.bind(graph)
+session.run(**seeds[0])
+t0 = time.perf_counter()
+seq = [session.run(**p) for p in seeds]
+seq_s = time.perf_counter() - t0
+
+batch = ppr.bind_batch(graph)
+batch.run_many(seeds)
+t0 = time.perf_counter()
+bat = batch.run_many(seeds)
+bat_s = time.perf_counter() - t0
+
+assert all(
+    np.array_equal(a.properties["PR_old"], b.properties["PR_old"])
+    for a, b in zip(seq, bat)
+), "batched PPR must match sequential runs bit-for-bit"
+top = int(np.argmax(bat[0].properties["PR_old"]))
+print(f"PPR x8 seeds: sequential {seq_s:.3f}s -> batched {bat_s:.3f}s "
+      f"({seq_s / bat_s:.1f}x faster); top vertex for seed "
+      f"{seeds[0]['source']}: {top}")

@@ -14,6 +14,7 @@ same MIR and share one content-hash cache entry.
 """
 
 from .core import (  # noqa: F401 - re-exported public API
+    BatchSession,
     CompileOptions,
     Program,
     ProgramError,
@@ -32,6 +33,7 @@ __all__ = [
     "ProgramError",
     "GraphProgram",
     "FrontendError",
+    "BatchSession",
     "Session",
     "SessionPool",
     "compile",

@@ -1,0 +1,28 @@
+"""Batched multi-query execution: one launch set answering K queries.
+
+Layers:
+
+* :class:`BatchEngine` — batched state ([K, n] properties, [K] host
+  scalars), masked host interpretation, vmapped kernel launches through
+  each engine's ``batched_runner`` hook;
+* :mod:`repro.batch.msbfs` — the bit-packed multi-source BFS fast path,
+  selected automatically from the MIR frontier/direction verdicts;
+* :class:`DynamicBatcher` — collects a live query stream into batches for
+  the serving path.
+
+The user-facing surface is :meth:`repro.core.program.Program.bind_batch`
+returning a :class:`repro.core.session.BatchSession`, plus the transparent
+rerouting inside ``Session.run_many`` / ``SessionPool.run_batch``.
+"""
+from .engine import BatchEngine, BatchError
+from .dynamic import BatchServeStats, DynamicBatcher
+from .msbfs import MSBFSPlan, match_msbfs
+
+__all__ = [
+    "BatchEngine",
+    "BatchError",
+    "BatchServeStats",
+    "DynamicBatcher",
+    "MSBFSPlan",
+    "match_msbfs",
+]

@@ -14,7 +14,11 @@ Public surface — compile once, bind many, run parameterized:
 * :class:`Session` — one (program, graph, backend) binding; owns lowered
   kernels and device state, reusable across runs.
 * :class:`SessionPool` — N sessions over one bound graph for batch/async
-  query serving.
+  query serving (``batch=N`` turns on dynamic batching).
+* :class:`BatchSession` — ``program.bind_batch(graph)``: K parameterized
+  queries per launch set (vmapped state + bit-packed multi-source BFS),
+  bit-identical to sequential runs; ``Session.run_many`` reroutes
+  batch-eligible lists here automatically.
 * ``backend="local"`` wraps the single-device :class:`Engine`;
   ``backend="distributed"`` wraps :class:`DistEngine` (multi-device
   shuffle supersteps). New backends plug in via
@@ -37,10 +41,12 @@ from .program import (
 from .program import compile  # noqa: A004 - intentional repro.compile verb
 from .semantic import analyze
 from .session import (
+    BatchSession,
     ExecutionBackend,
     Session,
     SessionError,
     SessionPool,
+    batch_eligible,
     register_backend,
 )
 
@@ -53,10 +59,12 @@ __all__ = [
     "Program",
     "ProgramError",
     "ParamSpec",
+    "BatchSession",
     "Session",
     "SessionError",
     "SessionPool",
     "ExecutionBackend",
+    "batch_eligible",
     "compile",
     "compile_program",
     "clear_program_cache",

@@ -615,6 +615,20 @@ def lower_pipeline(
     )
 
 
+def lower_kernel_batched(lowered: LoweredKernel) -> Callable:
+    """Batch-axis lowering: vectorize a lowered kernel over a query axis.
+
+    The full-stream executable already maps ``(state, scalars) -> updates``
+    for one query; ``vmap`` lifts every state array to ``[K, n]`` and every
+    scalar to ``[K]``, sharing the graph bindings (CSR/CSC/order arrays are
+    closed over, so the graph is traversed ONCE per launch for all K lanes).
+    vmap semantics guarantee per-lane results bit-identical to K sequential
+    launches, which is what makes Session.run_many's batched rerouting a
+    pure optimization.
+    """
+    return jax.jit(jax.vmap(lowered.run_full))
+
+
 def lower_kernel(
     module: mir.Module,
     kernel: mir.Kernel,

@@ -42,6 +42,17 @@ class EngineError(Exception):
 
 @dataclass
 class EngineStats:
+    """Per-run execution counters.
+
+    A stats object describes ONE engine run, which may answer more than one
+    query: batched execution (:mod:`repro.batch`) runs K parameter bindings
+    through a single set of launches and attaches the same stats object to
+    all K results with ``batch_size == K``. Launch/edge counters are
+    per-*batch*, never silently per-query — divide by ``batch_size`` (or use
+    :meth:`per_query_launches`) when aggregating across results that may mix
+    batched and sequential runs.
+    """
+
     kernel_launches: Dict[str, int] = field(default_factory=dict)
     compacted_launches: int = 0
     full_launches: int = 0
@@ -53,10 +64,29 @@ class EngineStats:
     # a fused kernel, and how many separate launches fusion saved overall
     fused_launches: int = 0
     launches_saved: int = 0
+    # how many queries this run answered (1 = plain sequential run; K > 1 =
+    # one batched run whose launches served K parameter bindings at once)
+    batch_size: int = 1
 
     @property
     def total_launches(self) -> int:
         return sum(self.kernel_launches.values())
+
+    @property
+    def per_query_launches(self) -> float:
+        """Launches amortized over the queries this run answered."""
+        return self.total_launches / max(self.batch_size, 1)
+
+
+def count_launch(stats: EngineStats, module: mir.Module, name: str) -> None:
+    """Record one logical kernel launch (a fused kernel counts once, not per
+    stage). Shared by the sequential engines and the batch engine so fusion
+    accounting stays consistent across both run modes."""
+    stats.kernel_launches[name] = stats.kernel_launches.get(name, 0) + 1
+    parts = module.fusion_groups.get(name)
+    if parts:
+        stats.fused_launches += 1
+        stats.launches_saved += len(parts) - 1
 
 
 @dataclass
@@ -64,6 +94,21 @@ class EngineResult:
     properties: Dict[str, np.ndarray]
     host_env: Dict[str, Any]
     stats: EngineStats
+
+
+@dataclass
+class BatchedLaunch:
+    """One kernel launch lowered over a leading batch (query) axis.
+
+    ``fn(state, scalars) -> updates`` where every state array carries a
+    leading ``K`` axis and every scalar is a ``[K]`` array; ``bump_stats``
+    applies the same counter increments the sequential engine would record
+    for ONE launch (the batch engine counts a batched launch once — the
+    per-query amortization lives in ``EngineStats.batch_size``).
+    """
+
+    fn: Callable[[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]], Dict[str, jnp.ndarray]]
+    bump_stats: Callable[[EngineStats], None]
 
 
 def _next_pow2(n: int) -> int:
@@ -97,6 +142,9 @@ class Engine:
         self.gb = backend._graph_bindings(self.graph, module, options, new2old=new2old)
         self._lowered: Dict[str, backend.LoweredKernel] = {}
         self._subset_cache: Dict[Tuple[str, int], Callable] = {}
+        # per-launch batching hooks: kernel name -> BatchedLaunch (built on
+        # demand by batched_runner(); driven by repro.batch.BatchEngine)
+        self._batched: Dict[str, "BatchedLaunch"] = {}
 
         # accumulator properties are NOT vertex-indexed (no id translation)
         self.accumulator_props = set()
@@ -182,13 +230,48 @@ class Engine:
         self._count_launch(name, kern)
         self._execute_kernel(name, kern)
 
+    # -- per-launch batching hook (repro.batch) -------------------------------
+    def batched_runner(self, name: str) -> "BatchedLaunch":
+        """Return the batch-axis executable for kernel ``name``.
+
+        The returned :class:`BatchedLaunch` runs one logical launch over a
+        leading query axis: state arrays are ``[K, n]``, scalar arrays are
+        ``[K]``, and the per-lane results are bit-identical to ``K``
+        independent sequential launches (vmap semantics). Subclasses
+        (e.g. :class:`~repro.core.dist_engine.DistEngine`) override this to
+        batch their own launch strategy — the shared contract is only
+        ``fn(state, scalars) -> updates`` plus honest stats accounting.
+        """
+        bl = self._batched.get(name)
+        if bl is None:
+            kern = self.module.kernels.get(name)
+            if kern is None:
+                raise EngineError(f"{name!r} is not a device kernel")
+            bl = self._batched[name] = BatchedLaunch(
+                fn=backend.lower_kernel_batched(self._kernel(name)),
+                bump_stats=self._full_stats_bump(kern),
+            )
+        return bl
+
+    def _full_stats_bump(self, kern) -> Callable[[EngineStats], None]:
+        """Stats increment matching one full-stream launch of ``kern``."""
+        n_edges = self.graph.n_edges
+        if kern.kind is mir.KernelKind.EDGE:
+            edges = n_edges
+        elif isinstance(kern, mir.PipelineKernel):
+            edges = n_edges * len(kern.edge_stages)
+        else:
+            edges = 0
+
+        def bump(stats: EngineStats) -> None:
+            stats.full_launches += 1
+            stats.edges_traversed += edges
+
+        return bump
+
     def _count_launch(self, name: str, kern):
         """One logical launch (a fused kernel counts once, not per stage)."""
-        self.stats.kernel_launches[name] = self.stats.kernel_launches.get(name, 0) + 1
-        parts = self.module.fusion_groups.get(name)
-        if parts:
-            self.stats.fused_launches += 1
-            self.stats.launches_saved += len(parts) - 1
+        count_launch(self.stats, self.module, name)
 
     def _execute_kernel(self, name: str, kern):
         lk = self._kernel(name)

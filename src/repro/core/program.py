@@ -60,7 +60,7 @@ from .parser import ParseError, parse
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from ..frontend import GraphProgram
     from ..graph.storage import GraphData
-    from .session import Session, SessionPool
+    from .session import BatchSession, Session, SessionPool
 
 
 class ProgramError(Exception):
@@ -238,6 +238,24 @@ class Program:
 
         return SessionPool(self, graph, backend=backend, size=size, argv=argv,
                            **backend_opts)
+
+    def bind_batch(self, graph: "GraphData", backend: str = "local", *,
+                   argv: Optional[list] = None, max_batch: Optional[int] = None,
+                   msbfs: bool = True, **backend_opts) -> "BatchSession":
+        """Place this program onto ``graph`` for batched multi-query runs.
+
+        The returned :class:`~repro.core.session.BatchSession` answers a
+        whole list of parameter bindings per execution — state carries a
+        leading batch axis, host control flow runs with per-query active
+        masks, and BFS-like frontier programs take the bit-packed
+        multi-source path — with results bit-identical to sequential
+        :meth:`bind` + ``run`` calls. See also ``Session.run_many``, which
+        reroutes batch-eligible lists here automatically.
+        """
+        from .session import BatchSession
+
+        return BatchSession(self, graph, backend=backend, argv=argv,
+                            max_batch=max_batch, msbfs=msbfs, **backend_opts)
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,15 @@ all_to_all shuffle supersteps). New backends register via
 :class:`SessionPool` holds N sessions over the same bound graph and
 serves batch/async query streams — the serving path used by
 ``repro.launch.serve --graph``.
+
+:class:`BatchSession` (``program.bind_batch(graph)``) answers K parameter
+bindings per launch set through :class:`repro.batch.BatchEngine`; both
+``Session.run_many`` and ``SessionPool.run_batch`` reroute batch-eligible
+query lists through it automatically, falling back to the sequential path
+otherwise. Any backend registered via :func:`register_backend` whose
+:class:`ExecutionBackend` exposes an ``engine`` attribute (an
+:class:`~repro.core.engine.Engine` subclass) serves batches through its
+own launch strategy — the local and distributed engines both do.
 """
 from __future__ import annotations
 
@@ -117,6 +126,30 @@ register_backend("local", LocalBackend)
 register_backend("distributed", DistributedBackend)
 
 
+# chunk size for the implicit BatchSessions behind Session.run_many /
+# SessionPool.run_batch: every distinct batch size K is a fresh XLA trace
+# of all kernels at state shape [K, n], so the automatic reroute caps K —
+# the possible trace shapes are then bounded (at most AUTO_MAX_BATCH of
+# them) no matter how query-list lengths vary across calls. Explicit
+# bind_batch() callers pick their own max_batch.
+AUTO_MAX_BATCH = 64
+
+
+def batch_eligible(coerced_sets: Sequence[Dict[str, Any]]) -> bool:
+    """True when a list of validated parameter sets can share one batch.
+
+    Eligibility is purely structural: every set binds the SAME parameter
+    names (values are scalars by construction — ``validate_params`` already
+    coerced them), so one vectorized state layout fits all of them. Mixed
+    key sets (e.g. some queries overriding ``iters`` and some not) fall
+    back to the sequential path.
+    """
+    if not coerced_sets:
+        return False
+    keys = set(coerced_sets[0])
+    return all(set(p) == keys for p in coerced_sets[1:])
+
+
 class Session:
     """One program bound to one graph on one backend; run it many times.
 
@@ -135,10 +168,15 @@ class Session:
         self.graph = graph
         self.backend_name = backend
         argv = list(argv) if argv is not None else ["prog", "<graph>"]
+        self._argv = argv
+        self._backend_opts = dict(backend_opts)
         self.backend: ExecutionBackend = _BACKENDS[backend](
             program, graph, argv=argv, **backend_opts
         )
         self.runs = 0
+        self._batch_session: Optional["BatchSession"] = None
+        self._batch_unsupported = False
+        self._batch_init_lock = threading.Lock()
         self._lock = threading.Lock()
 
     def run(self, **params) -> EngineResult:
@@ -151,11 +189,153 @@ class Session:
             self.runs += 1
             return result
 
-    def run_many(self, param_sets: Sequence[Dict[str, Any]]) -> List[EngineResult]:
-        """Run a sequence of parameter sets back-to-back (results in order)."""
-        return [self.run(**p) for p in param_sets]
+    def run_many(self, param_sets: Sequence[Dict[str, Any]],
+                 batched: Optional[bool] = None) -> List[EngineResult]:
+        """Run a sequence of parameter sets; results in submission order.
+
+        Results are **element-wise identical** to calling :meth:`run` once
+        per set, in order: ``run_many(ps)[i]`` carries bit-identical
+        properties and host scalars to ``run(**ps[i])``. When the sets are
+        batch-eligible (two or more sets sharing one parameter key set —
+        see :func:`batch_eligible`) and the backend exposes an engine, the
+        queries are answered by ONE batched execution
+        (:class:`BatchSession`) whose launches serve all K lanes at once;
+        otherwise the sequential loop runs. ``batched=True`` forces the
+        batched path (raising if ineligible), ``batched=False`` forces the
+        sequential loop; the default picks automatically. Only the
+        ``stats`` objects differ between the two paths: batched results
+        share one :class:`~repro.core.engine.EngineStats` with
+        ``batch_size == K`` and per-batch launch counters.
+        """
+        sets = [dict(p) for p in param_sets]
+        if batched is None:
+            coerced = [self.program.validate_params(p) for p in sets]
+            batched = len(sets) > 1 and batch_eligible(coerced)
+            if batched and self._ensure_batch_session() is None:
+                batched = False
+        if batched:
+            bs = self._ensure_batch_session()
+            if bs is None:
+                raise SessionError(
+                    f"backend {self.backend_name!r} does not expose an engine "
+                    "for batched execution"
+                )
+            return bs.run_many(sets)
+        return [self.run(**p) for p in sets]
+
+    def _ensure_batch_session(self) -> Optional["BatchSession"]:
+        """Lazily build the batched twin of this session (None if the
+        backend cannot host one; the failure is memoized so engine-less
+        backends don't rebuild-and-discard a backend per call)."""
+        with self._batch_init_lock:
+            if self._batch_session is None and not self._batch_unsupported:
+                try:
+                    self._batch_session = BatchSession(
+                        self.program, self.graph, backend=self.backend_name,
+                        argv=self._argv, max_batch=AUTO_MAX_BATCH,
+                        **self._backend_opts,
+                    )
+                except SessionError:
+                    self._batch_unsupported = True
+            return self._batch_session
 
     def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Release the session (hook for future device-owning backends)."""
+        if self._batch_session is not None:
+            self._batch_session.close()
+
+    def __repr__(self) -> str:
+        return (
+            f"Session({self.program.fingerprint[:12]} on {self.backend_name}, "
+            f"|V|={getattr(self.graph, 'n_vertices', '?')}, runs={self.runs})"
+        )
+
+
+class BatchSession:
+    """One program bound to one graph, answering K queries per launch set.
+
+    Created by ``program.bind_batch(graph, backend=...)``. ``run_many``
+    takes a list of parameter sets that share one key set and executes
+    them as a single batched run: state gains a leading batch axis, host
+    control flow runs with per-query active masks, and BFS-like frontier
+    programs automatically take the bit-packed multi-source path
+    (:mod:`repro.batch.msbfs`). Results are element-wise **bit-identical**
+    to sequential :meth:`Session.run` calls, in submission order.
+
+    Works on any registered backend whose :class:`ExecutionBackend`
+    exposes an ``engine`` attribute (the local and distributed engines
+    both do): the batch engine drives that engine's own per-launch
+    batching hooks, so e.g. distributed edge kernels still run as shuffle
+    supersteps — one vmapped all_to_all round for the whole batch.
+
+    ``max_batch`` chunks oversized query lists (a new batch size means a
+    new XLA trace, so serving paths pick one size and stick to it);
+    ``msbfs=False`` disables the multi-source BFS fast path (the generic
+    vmapped path then serves BFS too).
+    """
+
+    def __init__(self, program: Program, graph: GraphData, backend: str = "local",
+                 *, argv: Optional[list] = None, max_batch: Optional[int] = None,
+                 msbfs: bool = True, **backend_opts):
+        if backend not in _BACKENDS:
+            raise SessionError(
+                f"unknown backend {backend!r}; available: {backend_names()}"
+            )
+        if max_batch is not None and max_batch < 1:
+            raise SessionError("max_batch must be >= 1")
+        self.program = program
+        self.graph = graph
+        self.backend_name = backend
+        argv = list(argv) if argv is not None else ["prog", "<graph>"]
+        self.backend: ExecutionBackend = _BACKENDS[backend](
+            program, graph, argv=argv, **backend_opts
+        )
+        inner = getattr(self.backend, "engine", None)
+        if inner is None:
+            raise SessionError(
+                f"backend {backend!r} does not expose an engine attribute; "
+                "batched execution needs one (see ExecutionBackend)"
+            )
+        from ..batch.engine import BatchEngine
+
+        self.engine = BatchEngine(inner, enable_msbfs=msbfs)
+        self.max_batch = max_batch
+        self.runs = 0
+        self.queries = 0
+        self._lock = threading.Lock()
+
+    def run_many(self, param_sets: Sequence[Dict[str, Any]]) -> List[EngineResult]:
+        """Answer every parameter set in one (or few) batched executions.
+
+        All sets must share one parameter key set; raises
+        :class:`SessionError` otherwise (use :meth:`Session.run_many` for
+        mixed streams — it falls back to the sequential path).
+        """
+        coerced = [self.program.validate_params(dict(p)) for p in param_sets]
+        if not coerced:
+            return []
+        if not batch_eligible(coerced):
+            raise SessionError(
+                "param sets are not batch-eligible: every set must bind the "
+                "same parameter names (Session.run_many handles mixed streams)"
+            )
+        step = self.max_batch or len(coerced)
+        out: List[EngineResult] = []
+        with self._lock:  # one batched device context
+            for i in range(0, len(coerced), step):
+                chunk = coerced[i:i + step]
+                out.extend(self.engine.run_batch(chunk))
+                self.runs += 1
+                self.queries += len(chunk)
+        return out
+
+    def __enter__(self) -> "BatchSession":
         return self
 
     def __exit__(self, *exc) -> None:
@@ -166,8 +346,9 @@ class Session:
 
     def __repr__(self) -> str:
         return (
-            f"Session({self.program.fingerprint[:12]} on {self.backend_name}, "
-            f"|V|={getattr(self.graph, 'n_vertices', '?')}, runs={self.runs})"
+            f"BatchSession({self.program.fingerprint[:12]} on "
+            f"{self.backend_name}, |V|={getattr(self.graph, 'n_vertices', '?')}, "
+            f"runs={self.runs}, queries={self.queries})"
         )
 
 
@@ -180,15 +361,26 @@ class SessionPool:
     call :meth:`warmup` before latency-sensitive serving. ``submit``
     returns a Future; ``run_batch`` preserves submission order in its
     result list.
+
+    ``batch=N`` (N > 1) turns on **dynamic batching**: submitted queries
+    are collected by a :class:`repro.batch.DynamicBatcher` into groups of
+    up to N (waiting ``batch_wait_s`` for stragglers) and answered by one
+    shared :class:`BatchSession` instead of N worker runs — same results,
+    same Future surface, far fewer launches. ``pool.batch_stats`` then
+    reports batch occupancy.
     """
 
     def __init__(self, program: Program, graph: GraphData, backend: str = "local",
-                 size: int = 2, *, argv: Optional[list] = None, **backend_opts):
+                 size: int = 2, *, argv: Optional[list] = None, batch: int = 0,
+                 batch_wait_s: float = 0.002, **backend_opts):
         if size < 1:
             raise SessionError("SessionPool size must be >= 1")
         self.program = program
         self.graph = graph
         self.size = size
+        self.backend_name = backend
+        self._argv = argv
+        self._backend_opts = dict(backend_opts)
         self._sessions = [
             Session(program, graph, backend=backend, argv=argv, **backend_opts)
             for _ in range(size)
@@ -200,6 +392,42 @@ class SessionPool:
             max_workers=size, thread_name_prefix="repro-session"
         )
         self._closed = False
+        self._batch_session: Optional[BatchSession] = None
+        self._batch_unsupported = False
+        self._batch_lock = threading.Lock()
+        self._batcher = None
+        if batch > 1:
+            from ..batch.dynamic import DynamicBatcher
+
+            bs = self._ensure_batch_session(max_batch=batch)
+            if bs is None:
+                raise SessionError(
+                    f"backend {backend!r} cannot host the dynamic batcher "
+                    "(no engine attribute on its ExecutionBackend)"
+                )
+            self._batcher = DynamicBatcher(
+                bs.run_many, max_batch=batch, max_wait_s=batch_wait_s
+            )
+
+    @property
+    def batch_stats(self):
+        """Dynamic-batching occupancy stats (None unless ``batch > 1``)."""
+        return self._batcher.stats if self._batcher is not None else None
+
+    def _ensure_batch_session(self, max_batch: Optional[int] = None):
+        """Lazily build the pool-shared BatchSession (None if unsupported;
+        the failure is memoized)."""
+        with self._batch_lock:
+            if self._batch_session is None and not self._batch_unsupported:
+                try:
+                    self._batch_session = BatchSession(
+                        self.program, self.graph, backend=self.backend_name,
+                        argv=self._argv, max_batch=max_batch or AUTO_MAX_BATCH,
+                        **self._backend_opts,
+                    )
+                except SessionError:
+                    self._batch_unsupported = True
+            return self._batch_session
 
     # -- scheduling ---------------------------------------------------------
     def _acquire(self) -> Session:
@@ -224,31 +452,76 @@ class SessionPool:
     def warmup(self, **params) -> None:
         """Run one query on EVERY worker session so each jit-compiles its
         kernel launch paths before real traffic arrives. Warmups run
-        concurrently (XLA compilation releases the GIL)."""
+        concurrently (XLA compilation releases the GIL). With dynamic
+        batching enabled, the shared BatchSession is warmed too — at a full
+        ``batch``-sized query list, since that is the trace shape real
+        traffic hits (partial trailing batches still compile on first
+        sight)."""
         if self._closed:
             raise SessionError("SessionPool is closed")
         self.program.validate_params(params)
         futures = [self._executor.submit(s.run, **params) for s in self._sessions]
         for f in futures:
             f.result()
+        if self._batcher is not None and self._batch_session is not None:
+            self._batch_session.run_many([dict(params)] * self._batcher.max_batch)
 
     def submit(self, **params) -> "Future[EngineResult]":
-        """Async: enqueue one parameterized query, get a Future."""
+        """Async: enqueue one parameterized query, get a Future.
+
+        With dynamic batching enabled (``batch > 1``), the query joins the
+        collector queue and is answered as part of a batch; otherwise it is
+        dispatched to the next idle worker session. Either way the Future
+        resolves to the same result a dedicated :meth:`Session.run` would
+        produce.
+        """
         if self._closed:
             raise SessionError("SessionPool is closed")
         self.program.validate_params(params)  # fail fast on the caller thread
+        if self._batcher is not None:
+            return self._batcher.submit(params)
         return self._executor.submit(self._run_one, params)
 
-    def run_batch(self, param_sets: Sequence[Dict[str, Any]]) -> List[EngineResult]:
-        """Batch: run every parameter set; results in submission order."""
-        futures = [self.submit(**p) for p in param_sets]
+    def run_batch(self, param_sets: Sequence[Dict[str, Any]],
+                  batched: Optional[bool] = None) -> List[EngineResult]:
+        """Run every parameter set; results in submission order.
+
+        Results are element-wise identical to one :meth:`Session.run` per
+        set — whichever path answers them. Batch-eligible lists (same
+        parameter key set everywhere, two or more sets) are rerouted
+        through the pool's shared :class:`BatchSession` so one launch set
+        serves the whole list; anything else fans out to the worker
+        sessions. ``batched=True``/``False`` forces the choice (True raises
+        on ineligible lists).
+        """
+        if self._closed:
+            raise SessionError("SessionPool is closed")
+        sets = [dict(p) for p in param_sets]
+        if batched is None:
+            coerced = [self.program.validate_params(p) for p in sets]
+            batched = len(sets) > 1 and batch_eligible(coerced)
+            if batched and self._ensure_batch_session() is None:
+                batched = False
+        if batched:
+            bs = self._ensure_batch_session()
+            if bs is None:
+                raise SessionError(
+                    f"backend {self.backend_name!r} does not expose an engine "
+                    "for batched execution"
+                )
+            return bs.run_many(sets)
+        futures = [self.submit(**p) for p in sets]
         return [f.result() for f in futures]
 
     def close(self, wait: bool = True) -> None:
         self._closed = True
+        if self._batcher is not None:
+            self._batcher.close(wait=wait)
         self._executor.shutdown(wait=wait)
         for s in self._sessions:
             s.close()
+        if self._batch_session is not None:
+            self._batch_session.close()
 
     def __enter__(self) -> "SessionPool":
         return self
@@ -265,10 +538,12 @@ __all__ = [
     "EngineBackend",
     "LocalBackend",
     "DistributedBackend",
+    "BatchSession",
     "Session",
     "SessionError",
     "SessionPool",
     "ProgramError",
+    "batch_eligible",
     "register_backend",
     "backend_names",
 ]

@@ -51,6 +51,76 @@ def shuffle_reduce(
     return out[:n_out]
 
 
+@functools.partial(jax.jit, static_argnames=("n_out", "op", "interpret", "u", "et"))
+def shuffle_reduce_batched(
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    n_out: int,
+    op: str = "+",
+    *,
+    interpret: bool = True,
+    u: int = 512,
+    et: int = 1024,
+) -> jnp.ndarray:
+    """Batched scatter-reduce: ``[K, N]`` update lanes into ``[K, n_out]``.
+
+    One Pallas launch serves the whole batch: each lane's destinations are
+    offset into a private bin range (``idx + k * n_out``) and the flattened
+    ``[K * N]`` stream reduces into ``K * n_out`` bins — the multi-query
+    analogue of the shuffle network, with the batch axis materialized as
+    extra output partitions instead of extra launches. ``idx`` may be
+    shared (``[N]``, e.g. a fixed dst array) or per-lane (``[K, N]``).
+    Row ``k`` of the result equals ``shuffle_reduce(vals[k], idx[k], n_out,
+    op)`` — bit-identical for min/max and integer reductions; float sums
+    can differ in the last ulp where the flattened stream's tile boundaries
+    regroup the additions.
+    """
+    k, n = vals.shape
+    idx = jnp.broadcast_to(idx, (k, n)) if idx.ndim == 1 else idx
+    offsets = (jnp.arange(k, dtype=jnp.int32) * n_out)[:, None]
+    flat_idx = (idx.astype(jnp.int32) + offsets).reshape(-1)
+    out = shuffle_reduce(
+        vals.reshape(-1), flat_idx, k * n_out, op, interpret=interpret, u=u, et=et
+    )
+    return out.reshape(k, n_out)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "apply_op", "reduce_op", "interpret"))
+def edge_stream_batched(
+    src_vals: jnp.ndarray,
+    weights: jnp.ndarray,
+    dst: jnp.ndarray,
+    active: jnp.ndarray,
+    n_out: int,
+    apply_op: str = "add",
+    reduce_op: str = "min",
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched fused edge pipeline: ``[K, E]`` gathered operands in ONE kernel.
+
+    Same bin-offset flattening as :func:`shuffle_reduce_batched`: the K
+    per-query edge streams concatenate into one sorted stream whose
+    destination ids index ``K * n_out`` partitions, so the whole batch
+    costs one gather->apply->shuffle->reduce launch. ``weights`` / ``dst``
+    / ``active`` may each be shared (``[E]``) or per-lane (``[K, E]``).
+    Row ``k`` equals ``edge_stream(src_vals[k], ..., n_out, ...)`` —
+    bit-identical for min/max and integer reductions; float sums can
+    differ in the last ulp where tile boundaries regroup the additions.
+    """
+    k, n = src_vals.shape
+    weights = jnp.broadcast_to(weights, (k, n)) if weights.ndim == 1 else weights
+    dst = jnp.broadcast_to(dst, (k, n)) if dst.ndim == 1 else dst
+    active = jnp.broadcast_to(active, (k, n)) if active.ndim == 1 else active
+    offsets = (jnp.arange(k, dtype=jnp.int32) * n_out)[:, None]
+    flat_dst = (dst.astype(jnp.int32) + offsets).reshape(-1)
+    out = edge_stream(
+        src_vals.reshape(-1), weights.reshape(-1), flat_dst, active.reshape(-1),
+        k * n_out, apply_op, reduce_op, interpret=interpret,
+    )
+    return out.reshape(k, n_out)
+
+
 @functools.partial(jax.jit, static_argnames=("n_out", "apply_op", "reduce_op", "interpret"))
 def edge_stream(
     src_vals: jnp.ndarray,

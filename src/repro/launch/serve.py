@@ -8,6 +8,11 @@ Graph path — one compiled Program bound to one graph, many parameterized
 queries served through a SessionPool (compile once, bind once, answer N):
     PYTHONPATH=src python -m repro.launch.serve --graph bfs \
         --queries 32 --pool 4
+
+``--batch N`` turns on dynamic batching: queued queries are collected into
+batches of up to N and answered by one vectorized BatchSession execution
+(bit-identical results, far fewer launches); the printed stats then include
+batch occupancy. Per-query latency percentiles are reported either way.
 """
 from __future__ import annotations
 
@@ -78,20 +83,61 @@ def serve_graph(args) -> int:
         roots = rng.integers(0, graph.n_vertices, args.queries)
         queries = [{"root": int(r)} for r in roots]
 
+    mode = f"dynamic batching x{args.batch}" if args.batch > 1 else "per-worker"
     print(f"serving {args.queries} {args.graph} queries on |V|={graph.n_vertices} "
-          f"|E|={graph.n_edges} via {args.pool} sessions ({args.backend} backend)")
-    with program.pool(graph, size=args.pool, backend=args.backend) as pool:
+          f"|E|={graph.n_edges} via {args.pool} sessions ({args.backend} backend, "
+          f"{mode})")
+    with program.pool(graph, size=args.pool, backend=args.backend,
+                      batch=args.batch) as pool:
         t_warm = time.perf_counter()
         pool.warmup(**queries[0])  # every worker jit-compiles its kernels
         warm_s = time.perf_counter() - t_warm
+        # submit the whole stream; per-query latency = submit -> resolve.
+        # Latencies are recorded by done-callbacks (completion order, not
+        # submission order); f.result() can return before the callback has
+        # fired on the worker thread, so a semaphore gates the percentile
+        # computation on every callback having written its slot.
+        import threading
+
+        latencies = [0.0] * len(queries)
+        recorded = threading.Semaphore(0)
+
+        def _record(i, t_sub):
+            def cb(_fut):
+                latencies[i] = time.perf_counter() - t_sub
+                recorded.release()
+            return cb
+
         t0 = time.perf_counter()
-        results = pool.run_batch(queries)
+        futures = []
+        for i, q in enumerate(queries):
+            t_sub = time.perf_counter()
+            fut = pool.submit(**q)
+            fut.add_done_callback(_record(i, t_sub))
+            futures.append(fut)
+        results = [f.result() for f in futures]
         dt = time.perf_counter() - t0
+        for _ in queries:
+            recorded.acquire(timeout=60)
+        batch_stats = pool.batch_stats
     assert len(results) == len(queries)
-    total_iters = sum(r.stats.host_iterations for r in results)
+    # results of one batch share one stats object (batch_size = K): count
+    # each underlying execution once, then amortize per query
+    uniq = {id(r.stats): r.stats for r in results}
+    total_iters = sum(s.host_iterations for s in uniq.values())
+    total_launches = sum(s.total_launches for s in uniq.values())
     sample = np.asarray(results[0].properties[result_prop])
+    lat = np.asarray(latencies) * 1e3  # ms
+    p50, p90, p99 = np.percentile(lat, [50, 90, 99])
     print(f"answered {len(results)} queries in {dt:.3f}s "
-          f"({len(results) / dt:.1f} qps, {total_iters} host iterations total)")
+          f"({len(results) / dt:.1f} qps, {total_iters} host iterations, "
+          f"{total_launches} kernel launches, "
+          f"{total_launches / len(results):.1f} launches/query)")
+    print(f"latency per query: p50={p50:.1f}ms p90={p90:.1f}ms p99={p99:.1f}ms")
+    if batch_stats is not None:
+        print(f"dynamic batching: {batch_stats.batches} batches for "
+              f"{batch_stats.queries} queries, occupancy "
+              f"{batch_stats.occupancy:.0%} of max_batch={batch_stats.max_batch}")
     print(f"first result ({result_prop}): min={sample.min():.4g} "
           f"max={sample.max():.4g} warmup={warm_s:.3f}s for {args.pool} workers")
     return 0
@@ -101,7 +147,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="LM path: prompt batch size (default 4). Graph "
+                         "path: dynamic batching — collect up to N queued "
+                         "queries per vectorized execution (default off)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -116,7 +165,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.graph is not None:
+        if args.batch is None:
+            args.batch = 0  # graph path: dynamic batching off by default
         return serve_graph(args)
+    if args.batch is None:
+        args.batch = 4  # LM path: prompt batch size
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.has_decoder:

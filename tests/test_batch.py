@@ -1,0 +1,445 @@
+"""Batched multi-query execution tests (repro.batch + BatchSession).
+
+Covers the acceptance criteria of the batching PR:
+
+* batched results are **bit-identical** to sequential Session.run calls
+  for every evaluation algorithm, on both backends, with passes on and
+  off, across K in {1, 8, 64} (and a word-boundary-crossing K for the
+  bit-packed MS-BFS path);
+* the bit-packed multi-source BFS path is selected automatically from the
+  MIR template and falls back transparently;
+* batched launch totals grow sublinearly in K (<= 0.25 * K x sequential
+  for BFS at K=64);
+* Session.run_many / SessionPool.run_batch reroute batch-eligible lists
+  and fall back on mixed parameter signatures;
+* SessionPool stays correct under concurrent submit load, with and
+  without the dynamic batch collector (including query counts that are
+  not a multiple of the batch size);
+* EngineStats reports batch_size instead of passing off per-batch counts
+  as per-query.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.algorithms import embedded, sources
+from repro.batch import DynamicBatcher, match_msbfs
+from repro.core import CompileOptions
+from repro.core.program import ProgramError
+from repro.core.session import SessionError
+from repro.graph import generators
+
+PASSES_OFF = CompileOptions(passes="none")
+
+# algorithm -> (source, param maker: rng, k -> list of param dicts)
+ALGORITHMS = {
+    "bfs": (sources.BFS_ECP,
+            lambda rng, k: [{"root": int(r)} for r in rng.integers(0, 200, k)]),
+    "bfs_hybrid": (sources.BFS_HYBRID,
+                   lambda rng, k: [{"root": int(r)} for r in rng.integers(0, 200, k)]),
+    "pagerank": (sources.PAGERANK,
+                 lambda rng, k: [{"iters": int(i)} for i in rng.integers(2, 8, k)]),
+    "sssp": (sources.SSSP,
+             lambda rng, k: [{"root": int(r)} for r in rng.integers(0, 200, k)]),
+    "ppr": (sources.PPR,
+            lambda rng, k: [{"source": int(s), "max_iters": 12}
+                            for s in rng.integers(0, 200, k)]),
+    "cgaw": (sources.CGAW, lambda rng, k: [{} for _ in range(k)]),
+    "wcc": (sources.WCC, lambda rng, k: [{} for _ in range(k)]),
+    "kcore": (sources.KCORE,
+              lambda rng, k: [{"k": int(v)} for v in rng.integers(2, 5, k)]),
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.power_law(200, 1400, seed=5, weighted=True)
+
+
+def assert_results_identical(seq, bat, ctx=""):
+    assert len(seq) == len(bat)
+    for i, (a, b) in enumerate(zip(seq, bat)):
+        assert set(a.properties) == set(b.properties), f"{ctx}[{i}]"
+        for name, want in a.properties.items():
+            assert np.array_equal(want, b.properties[name]), (
+                f"{ctx}[{i}].{name} not bit-identical to the sequential run"
+            )
+        assert set(a.host_env) == set(b.host_env), f"{ctx}[{i}] host_env keys"
+        for name, want in a.host_env.items():
+            assert b.host_env[name] == want, f"{ctx}[{i}] host scalar {name}"
+
+
+# ---------------------------------------------------------------------------
+# equivalence matrix: every algorithm x backend x passes, K = 8
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", list(ALGORITHMS), ids=list(ALGORITHMS))
+@pytest.mark.parametrize("backend", ["local", "distributed"])
+@pytest.mark.parametrize("passes", ["default", "none"], ids=["passes_on", "passes_off"])
+def test_batched_equivalence_matrix(graph, algo, backend, passes):
+    src, mk = ALGORITHMS[algo]
+    opts = CompileOptions(passes=passes)
+    prog = repro.compile(src, opts)
+    sets = mk(np.random.default_rng(7), 8)
+    sess = prog.bind(graph, backend=backend)
+    seq = [sess.run(**p) for p in sets]
+    bat = prog.bind_batch(graph, backend=backend).run_many(sets)
+    assert_results_identical(seq, bat, f"{algo}/{backend}/{passes}")
+
+
+# ---------------------------------------------------------------------------
+# K sweep (acceptance: K in {1, 8, 64}; 40 crosses the packed-word boundary)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["bfs", "pagerank"])
+@pytest.mark.parametrize("k", [1, 8, 40, 64])
+def test_batched_k_sweep(graph, algo, k):
+    src, mk = ALGORITHMS[algo]
+    prog = repro.compile(src)
+    sets = mk(np.random.default_rng(k), k)
+    sess = prog.bind(graph)
+    seq = [sess.run(**p) for p in sets]
+    bat = prog.bind_batch(graph).run_many(sets)
+    assert_results_identical(seq, bat, f"{algo}/K={k}")
+    assert bat[0].stats.batch_size == k
+
+
+def test_batched_bfs_generic_path_matches_msbfs(graph):
+    """msbfs=False forces the generic vmapped path onto BFS: same results."""
+    prog = repro.compile(sources.BFS_ECP)
+    sets = [{"root": int(r)} for r in np.random.default_rng(1).integers(0, 200, 8)]
+    fast = prog.bind_batch(graph).run_many(sets)
+    generic = prog.bind_batch(graph, msbfs=False).run_many(sets)
+    assert_results_identical(fast, generic, "msbfs-vs-vmap")
+    from repro.batch.engine import BatchEngine
+
+    assert BatchEngine.MSBFS_NAME in fast[0].stats.kernel_launches
+    assert BatchEngine.MSBFS_NAME not in generic[0].stats.kernel_launches
+
+
+# ---------------------------------------------------------------------------
+# MS-BFS template selection
+# ---------------------------------------------------------------------------
+
+
+def test_msbfs_matches_bfs_template():
+    for opts in (CompileOptions(), PASSES_OFF):
+        plan = match_msbfs(repro.compile(sources.BFS_ECP, opts).module)
+        assert plan is not None, f"BFS template should match (passes={opts.passes})"
+        assert plan.level_prop == "old_level"
+        assert plan.next_prop == "new_level"
+        assert plan.tuple_prop == "tuple"
+        assert plan.counter_prop == "activeVertex"
+        assert plan.root_scalar == "root"
+        assert plan.inf == 2147483647
+    # the embedded twin produces the same MIR, hence the same plan
+    plan = match_msbfs(repro.compile(embedded.build_bfs_ecp()).module)
+    assert plan is not None and plan.level_prop == "old_level"
+
+
+def test_msbfs_rejects_non_bfs_programs():
+    # hybrid BFS: direction-switching host `if` breaks the template
+    assert match_msbfs(repro.compile(sources.BFS_HYBRID).module) is None
+    # PageRank: no dynamic frontier at all
+    assert match_msbfs(repro.compile(sources.PAGERANK).module) is None
+    assert match_msbfs(repro.compile(sources.SSSP).module) is None
+
+
+def test_msbfs_declines_when_level_param_overridden(graph):
+    """Binding `level` explicitly leaves the template (level must start at
+    1) — the engine must fall back to the generic path, still correct."""
+    prog = repro.compile(sources.BFS_ECP)
+    sets = [{"root": 3, "level": 1}, {"root": 9, "level": 1}]
+    sess = prog.bind(graph)
+    seq = [sess.run(**p) for p in sets]
+    bat = prog.bind_batch(graph).run_many(sets)
+    assert_results_identical(seq, bat, "level-override")
+    from repro.batch.engine import BatchEngine
+
+    assert BatchEngine.MSBFS_NAME not in bat[0].stats.kernel_launches
+
+
+# ---------------------------------------------------------------------------
+# launch sublinearity (acceptance: <= 0.25 * K x sequential at K = 64)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("msbfs", [True, False], ids=["msbfs", "vmap"])
+def test_bfs_launch_sublinearity_at_k64(graph, msbfs):
+    prog = repro.compile(sources.BFS_ECP)
+    roots = [{"root": int(r)}
+             for r in np.random.default_rng(2).integers(0, 200, 64)]
+    sess = prog.bind(graph)
+    seq_total = sum(sess.run(**p).stats.total_launches for p in roots)
+    bat = prog.bind_batch(graph, msbfs=msbfs).run_many(roots)
+    batched_total = bat[0].stats.total_launches
+    assert batched_total <= 0.25 * seq_total, (
+        f"batched BFS used {batched_total} launches vs {seq_total} sequential"
+    )
+
+
+def test_pagerank_launch_sublinearity(graph):
+    prog = repro.compile(sources.PAGERANK)
+    sets = [{"iters": 6}] * 16
+    sess = prog.bind(graph)
+    seq_total = sum(sess.run(**p).stats.total_launches for p in sets)
+    bat = prog.bind_batch(graph).run_many(sets)
+    # identical iteration counts: the batch needs exactly 1/16th the launches
+    assert bat[0].stats.total_launches * 16 == seq_total
+
+
+# ---------------------------------------------------------------------------
+# EngineStats batch accounting
+# ---------------------------------------------------------------------------
+
+
+def test_stats_batch_size_and_per_query(graph):
+    prog = repro.compile(sources.PAGERANK)
+    seq = prog.bind(graph).run(iters=4)
+    assert seq.stats.batch_size == 1
+    assert seq.stats.per_query_launches == seq.stats.total_launches
+    bat = prog.bind_batch(graph).run_many([{"iters": 4}] * 8)
+    stats = bat[0].stats
+    assert stats.batch_size == 8
+    # all results of one batch share one stats object — per-batch counters
+    # are explicitly labeled, never silently presented as per-query
+    assert all(r.stats is stats for r in bat)
+    assert stats.per_query_launches == stats.total_launches / 8
+
+
+# ---------------------------------------------------------------------------
+# Session.run_many rerouting
+# ---------------------------------------------------------------------------
+
+
+def test_run_many_reroutes_eligible_sets(graph):
+    prog = repro.compile(sources.PAGERANK)
+    sess = prog.bind(graph)
+    sets = [{"iters": int(i)} for i in (3, 5, 7, 9)]
+    seq = [prog.bind(graph).run(**p) for p in sets]
+    got = sess.run_many(sets)
+    assert sess._batch_session is not None, "eligible list should batch"
+    assert_results_identical(seq, got, "run_many")
+    assert got[0].stats.batch_size == 4
+
+
+def test_run_many_falls_back_on_mixed_signatures(graph):
+    prog = repro.compile(sources.PAGERANK)
+    sess = prog.bind(graph)
+    sets = [{"iters": 3}, {"damp": 0.9}]  # different key sets
+    got = sess.run_many(sets)
+    assert sess._batch_session is None, "mixed signatures must not batch"
+    assert got[0].stats.batch_size == 1
+    seq = [prog.bind(graph).run(**p) for p in sets]
+    assert_results_identical(seq, got, "run_many-mixed")
+
+
+def test_run_many_batched_flag(graph):
+    prog = repro.compile(sources.PAGERANK)
+    sess = prog.bind(graph)
+    sets = [{"iters": 3}, {"iters": 4}]
+    forced_seq = sess.run_many(sets, batched=False)
+    assert forced_seq[0].stats.batch_size == 1
+    forced_bat = sess.run_many(sets, batched=True)
+    assert forced_bat[0].stats.batch_size == 2
+    assert_results_identical(forced_seq, forced_bat, "batched-flag")
+    with pytest.raises(SessionError):
+        sess.run_many([{"iters": 3}, {"damp": 0.9}], batched=True)
+
+
+def test_batch_session_validation(graph):
+    prog = repro.compile(sources.PAGERANK)
+    bs = prog.bind_batch(graph)
+    assert bs.run_many([]) == []
+    with pytest.raises(ProgramError):
+        bs.run_many([{"nope": 1}])
+    with pytest.raises(SessionError):
+        bs.run_many([{"iters": 3}, {"damp": 0.9}])
+
+
+def test_bind_batch_max_batch_chunks(graph):
+    prog = repro.compile(sources.PAGERANK)
+    bs = prog.bind_batch(graph, max_batch=3)
+    got = bs.run_many([{"iters": 4}] * 7)  # 3 + 3 + 1
+    assert len(got) == 7
+    assert bs.runs == 3
+    sizes = sorted({r.stats.batch_size for r in got})
+    assert sizes == [1, 3]
+
+
+# ---------------------------------------------------------------------------
+# SessionPool: rerouting, concurrency, dynamic batch collector
+# ---------------------------------------------------------------------------
+
+
+def test_pool_run_batch_reroutes(graph):
+    prog = repro.compile(sources.PAGERANK)
+    sets = [{"iters": int(i)} for i in (3, 4, 5, 6)]
+    seq = [prog.bind(graph).run(**p) for p in sets]
+    with prog.pool(graph, size=2) as pool:
+        got = pool.run_batch(sets)
+    assert_results_identical(seq, got, "pool-batched")
+    assert got[0].stats.batch_size == 4
+    with prog.pool(graph, size=2) as pool:
+        got_seq = pool.run_batch(sets, batched=False)
+    assert_results_identical(seq, got_seq, "pool-sequential")
+    assert got_seq[0].stats.batch_size == 1
+
+
+def test_pool_concurrent_submit_thread_safety(graph):
+    """Hammer acquire/release from many threads; every result must match
+    its own dedicated sequential run."""
+    prog = repro.compile(sources.PAGERANK)
+    iters = [2 + (i % 5) for i in range(24)]
+    want = {it: prog.bind(graph).run(iters=it) for it in sorted(set(iters))}
+    with prog.pool(graph, size=3) as pool:
+        results = [None] * len(iters)
+        errors = []
+
+        def worker(i):
+            try:
+                results[i] = pool.submit(iters=iters[i]).result(timeout=120)
+            except Exception as exc:  # pragma: no cover - failure reporting
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(iters))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+    assert not errors
+    for i, it in enumerate(iters):
+        assert results[i] is not None
+        assert np.array_equal(results[i].properties["rank"],
+                              want[it].properties["rank"])
+
+
+def test_pool_dynamic_batcher_non_multiple_batch(graph):
+    """batch=4 with 10 concurrent queries: the collector forms partial
+    batches as needed and every Future resolves to the right answer."""
+    prog = repro.compile(sources.PAGERANK)
+    iters = [2 + (i % 3) for i in range(10)]
+    want = {it: prog.bind(graph).run(iters=it) for it in sorted(set(iters))}
+    with prog.pool(graph, size=2, batch=4, batch_wait_s=0.05) as pool:
+        futures = [pool.submit(iters=it) for it in iters]
+        results = [f.result(timeout=180) for f in futures]
+        stats = pool.batch_stats
+    assert stats is not None
+    assert stats.queries == 10
+    assert sum(stats.sizes) == 10
+    assert all(1 <= s <= 4 for s in stats.sizes)
+    assert 0.0 < stats.occupancy <= 1.0
+    for it, res in zip(iters, results):
+        assert np.array_equal(res.properties["rank"], want[it].properties["rank"])
+        assert res.host_env["iters"] == it
+
+
+def test_dynamic_batcher_splits_mixed_signatures():
+    """One batch = one parameter signature; mixed streams split batches."""
+    calls = []
+
+    def run_many(param_sets):
+        keys = {frozenset(p) for p in param_sets}
+        assert len(keys) == 1, "batcher handed down a mixed batch"
+        calls.append(len(param_sets))
+        return [dict(p) for p in param_sets]
+
+    b = DynamicBatcher(run_many, max_batch=8, max_wait_s=0.05)
+    futs = [b.submit({"root": i}) for i in range(3)]
+    futs += [b.submit({"iters": i}) for i in range(2)]
+    futs += [b.submit({"root": 9})]
+    out = [f.result(timeout=60) for f in futs]
+    b.close()
+    assert out[0] == {"root": 0} and out[3] == {"iters": 0} and out[5] == {"root": 9}
+    assert sum(calls) == 6
+
+
+def test_dynamic_batcher_propagates_errors():
+    def run_many(param_sets):
+        raise ValueError("boom")
+
+    b = DynamicBatcher(run_many, max_batch=4, max_wait_s=0.01)
+    fut = b.submit({"x": 1})
+    with pytest.raises(ValueError):
+        fut.result(timeout=60)
+    b.close()
+    with pytest.raises(RuntimeError):
+        b.submit({"x": 2})
+
+
+# ---------------------------------------------------------------------------
+# embedded front-end + distributed backend through bind_batch
+# ---------------------------------------------------------------------------
+
+
+def test_bind_batch_embedded_front_end(graph):
+    """The embedded BFS twin batches identically to its text source."""
+    sets = [{"root": int(r)} for r in np.random.default_rng(4).integers(0, 200, 8)]
+    text = repro.compile(sources.BFS_ECP).bind_batch(graph).run_many(sets)
+    emb = repro.compile(embedded.build_bfs_ecp()).bind_batch(graph).run_many(sets)
+    assert_results_identical(text, emb, "embedded")
+
+
+def test_distributed_batch_still_supersteps(graph):
+    """Batched distributed PageRank keeps running shuffle supersteps —
+    one vmapped all_to_all round per iteration for the whole batch."""
+    prog = repro.compile(sources.PAGERANK)
+    bat = prog.bind_batch(graph, backend="distributed").run_many(
+        [{"iters": 6}] * 4)
+    assert bat[0].stats.dist_supersteps == 6
+    assert bat[0].stats.batch_size == 4
+
+
+# ---------------------------------------------------------------------------
+# batched Pallas entry points
+# ---------------------------------------------------------------------------
+
+
+def test_shuffle_reduce_batched_matches_per_row():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    k, n, n_out = 4, 300, 64
+    vals = rng.normal(size=(k, n)).astype(np.float32)
+    ivals = rng.integers(-50, 50, (k, n)).astype(np.int32)
+    idx = rng.integers(0, n_out, (k, n)).astype(np.int32)
+    for op in ("min", "max"):
+        got = ops.shuffle_reduce_batched(vals, idx, n_out, op)
+        for q in range(k):
+            assert np.array_equal(
+                np.asarray(got[q]),
+                np.asarray(ops.shuffle_reduce(vals[q], idx[q], n_out, op)))
+    got = ops.shuffle_reduce_batched(ivals, idx, n_out, "+")
+    for q in range(k):
+        assert np.array_equal(
+            np.asarray(got[q]),
+            np.asarray(ops.shuffle_reduce(ivals[q], idx[q], n_out, "+")))
+    # shared idx broadcasting + float sums (tile regrouping: allclose)
+    got = ops.shuffle_reduce_batched(vals, idx[0], n_out, "+")
+    for q in range(k):
+        np.testing.assert_allclose(
+            np.asarray(got[q]),
+            np.asarray(ops.shuffle_reduce(vals[q], idx[0], n_out, "+")),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_edge_stream_batched_matches_per_row():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(1)
+    k, n, n_out = 3, 400, 64
+    sv = rng.normal(size=(k, n)).astype(np.float32)
+    w = rng.normal(size=(n,)).astype(np.float32)
+    dst = rng.integers(0, n_out, (n,)).astype(np.int32)
+    act = rng.integers(0, 2, (n,)).astype(bool)
+    for red in ("min", "max"):
+        got = ops.edge_stream_batched(sv, w, dst, act, n_out, "add", red)
+        for q in range(k):
+            assert np.array_equal(
+                np.asarray(got[q]),
+                np.asarray(ops.edge_stream(sv[q], w, dst, act, n_out, "add", red)))
