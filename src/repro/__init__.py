@@ -11,24 +11,47 @@ Graph-program quickstart (compile once, bind many, run parameterized):
 ``src`` is either ``.gt`` text or an embedded :class:`GraphProgram`
 (:mod:`repro.frontend`) — two front-ends, one compiler: both produce the
 same MIR and share one content-hash cache entry.
+
+Deployment path (compile -> lower -> bind): AOT-lower once per shape
+bucket and substrate, then bind any number of same-shape graphs — and
+warm-start new processes from a saved artifact:
+
+    acc = program.lower(repro.Target(), shape=repro.GraphShape(
+        n_vertices=2000, n_edges=16000))
+    acc.save("artifacts/bfs")               # canonical MIR + executables
+    ...
+    acc = repro.load_accelerator("artifacts/bfs")
+    result = acc.bind(graph).run(root=3)    # shape check only, no compile
 """
 
 from .core import (  # noqa: F401 - re-exported public API
+    Accelerator,
+    AcceleratorError,
     BatchSession,
     CompileOptions,
+    GraphShape,
     Program,
     ProgramError,
     Session,
     SessionPool,
+    Target,
     compile,
     compile_program,
+    load_accelerator,
+    program_cache_info,
+    set_program_cache_limit,
 )
 from .frontend import FrontendError, GraphProgram  # noqa: F401
 
-__version__ = "0.3.0"
+__version__ = "0.4.0"
 
 __all__ = [
     "CompileOptions",
+    "Target",
+    "Accelerator",
+    "AcceleratorError",
+    "GraphShape",
+    "load_accelerator",
     "Program",
     "ProgramError",
     "GraphProgram",
@@ -38,5 +61,7 @@ __all__ = [
     "SessionPool",
     "compile",
     "compile_program",
+    "program_cache_info",
+    "set_program_cache_limit",
     "__version__",
 ]

@@ -27,6 +27,13 @@ Public surface — compile once, bind many, run parameterized:
 ``compile_source`` / ``run_source`` and hand-built :class:`Engine` objects
 remain as deprecated shims for older callers.
 """
+from .accelerator import (
+    Accelerator,
+    AcceleratorError,
+    AcceleratorReport,
+    GraphShape,
+    load_accelerator,
+)
 from .engine import Engine, EngineResult, compile_source, run_source
 from .options import CompileOptions
 from .parser import parse
@@ -37,8 +44,11 @@ from .program import (
     ProgramError,
     clear_program_cache,
     compile_program,
+    program_cache_info,
+    set_program_cache_limit,
 )
 from .program import compile  # noqa: A004 - intentional repro.compile verb
+from .target import Target
 from .semantic import analyze
 from .session import (
     BatchSession,
@@ -54,6 +64,12 @@ __all__ = [
     "Engine",
     "EngineResult",
     "CompileOptions",
+    "Target",
+    "Accelerator",
+    "AcceleratorError",
+    "AcceleratorReport",
+    "GraphShape",
+    "load_accelerator",
     "PassError",
     "DEFAULT_PASSES",
     "Program",
@@ -68,6 +84,8 @@ __all__ = [
     "compile",
     "compile_program",
     "clear_program_cache",
+    "program_cache_info",
+    "set_program_cache_limit",
     "register_backend",
     "compile_source",
     "run_source",

@@ -498,24 +498,100 @@ def _obj_name(e: fir.Expr) -> str:
 
 @dataclass
 class LoweredKernel:
-    """A device kernel lowered against a concrete graph + options."""
+    """A device kernel lowered against a concrete graph + target."""
 
     name: str
     kind: mir.KernelKind
-    run_full: Callable  # jit'd: (state, scalars) -> prop updates
+    run_full: Callable  # jit'd (or AOT-compiled): (state, scalars) -> prop updates
     run_subset: Optional[Callable] = None  # jit'd: (state, scalars, batch) -> updates
     frontier: Optional[mir.FrontierInfo] = None
+    # traceable twin of run_full (raw Python, un-jitted): what vmap-based
+    # batch lowering traces through. AOT-compiled executables cannot be
+    # traced, so library-backed kernels MUST provide this.
+    trace_full: Optional[Callable] = None
+
+
+# graph-binding entries that are device arrays (as opposed to the static
+# n_vertices/n_edges ints). Shape-generic (AOT) lowering passes exactly
+# these as traced arguments so one executable serves every graph of a
+# shape bucket; all are int32, [E]-shaped except orig_id ([V]).
+GB_ARRAY_KEYS: Tuple[str, ...] = (
+    "order", "src", "dst", "dst_sort_perm",
+    "csr_row_pos", "csr_indices", "csr_eids",
+    "csc_row_pos", "csc_indices", "csc_eids",
+    "orig_id",
+)
+
+
+def make_frontier_builder(n_vertices: int, n_edges: int, weighted: bool):
+    """Jitted device-side frontier expansion, shape-generic.
+
+    Maps active-vertex masks to padded CSR edge ranges in O(V + pad_e)
+    work (never O(E)). Per-graph arrays (degrees, row starts, CSR
+    indices/eids) are traced arguments, so one builder serves every graph
+    of a shape bucket; only (|V|, |E|, weighted) are baked in. This is the
+    single copy of the expansion math — the engine binds its own graph's
+    arrays over it, the accelerator's KernelLibrary shares one across
+    binds.
+    """
+
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("pad_v", "pad_e"))
+    def build(deg, starts, csr_indices, csr_eids, mask, weights, pad_v, pad_e):
+        (act,) = jnp.nonzero(mask, size=pad_v, fill_value=n_vertices)  # O(V)
+        vok = act < n_vertices
+        act_c = jnp.minimum(act, n_vertices - 1)
+        deg_a = jnp.where(vok, deg[act_c], 0)
+        starts_a = starts[act_c]
+        cum = jnp.cumsum(deg_a) - deg_a
+        # ragged CSR-range expansion, O(pad_e)
+        src = jnp.repeat(act_c, deg_a, total_repeat_length=pad_e)
+        offs = jnp.repeat(cum, deg_a, total_repeat_length=pad_e)
+        base = jnp.repeat(starts_a, deg_a, total_repeat_length=pad_e)
+        pos = jnp.arange(pad_e, dtype=jnp.int32)
+        valid = pos < jnp.sum(deg_a)
+        slots = jnp.minimum(base + (pos - offs), n_edges - 1)
+        dst = csr_indices[slots]
+        eid = csr_eids[slots]
+        w = weights[eid] if weighted else jnp.zeros((pad_e,), jnp.float32)
+        return src, dst, w, eid, valid
+
+    return build
+
+
+def gb_array_specs(n_vertices: int, n_edges: int) -> Dict[str, Any]:
+    """jax.ShapeDtypeStruct tree of the graph-binding arrays for a shape."""
+    specs = {}
+    for key in GB_ARRAY_KEYS:
+        n = n_vertices if key == "orig_id" else n_edges
+        specs[key] = jax.ShapeDtypeStruct((n,), jnp.int32)
+    return specs
+
+
+def split_gb_arrays(gb: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+    """Project a concrete graph-binding dict onto its array entries."""
+    return {k: gb[k] for k in GB_ARRAY_KEYS}
 
 
 def _graph_bindings(
     g: GraphData,
     module: mir.Module,
-    options: CompileOptions,
+    options,
     new2old: Optional[np.ndarray] = None,
 ):
-    """Precompute static processing-order arrays (the Burst Read plan)."""
+    """Precompute static processing-order arrays (the Burst Read plan).
+
+    ``options`` is a :class:`~repro.core.target.Target` (or a legacy
+    CompileOptions through the compat shim — both expose the substrate
+    attributes read here).
+    """
     if options.burst:
-        n_parts = options.n_partitions or max(1, g.n_vertices // 4096)
+        auto = getattr(options, "auto_partitions", None)
+        if auto is not None:
+            n_parts = auto(g.n_vertices)
+        else:
+            n_parts = options.n_partitions or max(1, g.n_vertices // 4096)
         pe = g.partition_by_dst(n_parts)
         order = pe.edge_order
     else:
@@ -611,7 +687,8 @@ def lower_pipeline(
         return out
 
     return LoweredKernel(
-        pipeline.name, mir.KernelKind.PIPELINE, run_full=jax.jit(run_full)
+        pipeline.name, mir.KernelKind.PIPELINE, run_full=jax.jit(run_full),
+        trace_full=run_full,
     )
 
 
@@ -625,8 +702,12 @@ def lower_kernel_batched(lowered: LoweredKernel) -> Callable:
     vmap semantics guarantee per-lane results bit-identical to K sequential
     launches, which is what makes Session.run_many's batched rerouting a
     pure optimization.
+
+    Library-backed (AOT) kernels supply ``trace_full`` — an un-jitted twin
+    of ``run_full`` — because a compiled executable cannot be traced.
     """
-    return jax.jit(jax.vmap(lowered.run_full))
+    fn = lowered.trace_full if lowered.trace_full is not None else lowered.run_full
+    return jax.jit(jax.vmap(fn))
 
 
 def lower_kernel(
@@ -665,6 +746,7 @@ def lower_kernel(
             run_full=jax.jit(run_full),
             run_subset=jax.jit(run_subset),
             frontier=kernel.frontier,
+            trace_full=run_full,
         )
 
     # vertex kernel
@@ -682,5 +764,117 @@ def lower_kernel(
         kernel.name, kernel.kind,
         run_full=jax.jit(run_full),
         run_subset=jax.jit(run_subset) if not kernel.has_neighbor_loop else None,
+        frontier=kernel.frontier,
+        trace_full=run_full,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shape-generic (AOT) kernel lowering — the Accelerator artifact's back-end
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GenericLoweredKernel:
+    """A kernel lowered against a (target, shape bucket), graph-independent.
+
+    Unlike :class:`LoweredKernel`, the graph-binding arrays are traced
+    *arguments* rather than closed-over constants: every array the Burst
+    Read plan produces has a shape fully determined by (|V|, |E|), so one
+    executable serves every graph of the bucket — the software analogue of
+    rebinding a synthesized bitstream to a new graph. ``compiled_full`` is
+    the AOT executable (``jax.jit(...).lower(specs).compile()``) when the
+    accelerator has been lowered; ``jit_full`` is the shared lazily-traced
+    fallback (also what compacted-subset and batched paths reuse across
+    binds, so shape-bucket rebinds never recompile).
+    """
+
+    name: str
+    kind: mir.KernelKind
+    raw_full: Callable  # traceable: (gb_arrays, state, scalars) -> updates
+    jit_full: Callable  # jax.jit(raw_full)
+    jit_subset: Optional[Callable] = None  # (gb_arrays, state, scalars, batch)
+    frontier: Optional[mir.FrontierInfo] = None
+    compiled_full: Optional[Any] = None  # AOT executable or None
+    # shared batch-axis lowering (built lazily by KernelLibrary.batched_for):
+    # jit(vmap(raw_full, in_axes=(None, 0, 0))) — graph bindings unbatched,
+    # state/scalars over the query axis. Living here (not per engine) is
+    # what lets same-bucket rebinds reuse the batched XLA traces too.
+    jit_batched: Optional[Callable] = None
+
+
+def lower_kernel_generic(
+    module: mir.Module,
+    kernel,
+    n_vertices: int,
+    n_edges: int,
+    target,
+) -> GenericLoweredKernel:
+    """Lower one kernel with graph bindings as arguments (shape-generic)."""
+    statics = {"n_vertices": n_vertices, "n_edges": n_edges}
+
+    if isinstance(kernel, mir.PipelineKernel):
+        stages = list(kernel.stages)
+
+        def raw_full(gba, state, scalars):
+            gb = dict(gba, **statics)
+            cur = dict(state)
+            out: Dict[str, jnp.ndarray] = {}
+            for stage in stages:
+                upd = _exec_kernel_full(module, stage, target, gb, cur, scalars)
+                cur.update(upd)
+                out.update(upd)
+            return out
+
+        return GenericLoweredKernel(
+            kernel.name, mir.KernelKind.PIPELINE, raw_full, jax.jit(raw_full)
+        )
+
+    if kernel.kind is mir.KernelKind.EDGE:
+
+        def raw_full(gba, state, scalars):
+            return _exec_kernel_full(
+                module, kernel, target, dict(gba, **statics), state, scalars
+            )
+
+        def raw_subset(gba, state, scalars, batch):
+            src, dst, w, eid, valid = batch
+            # subsets are unsorted: disable the static shuffle permutation
+            sub_gb = dict(gba, **statics, dst_sort_perm=None)
+            ex = KernelExec(module, kernel, target, state, scalars, sub_gb)
+            bindings = {kernel.src_param: src, kernel.dst_param: dst, "edge": eid}
+            if kernel.weight_param is not None:
+                bindings[kernel.weight_param] = w
+            lane = LaneCtx(n_lanes=src.shape[0], bindings=bindings, valid=valid)
+            ex.exec_block(kernel.func.body, lane, None)
+            out = ex.commit()
+            if WEIGHT_KEY in out:
+                prev = state[WEIGHT_KEY]
+                vals = jnp.where(valid, out[WEIGHT_KEY], prev[eid])
+                out[WEIGHT_KEY] = prev.at[eid].set(vals)
+            return out
+
+        return GenericLoweredKernel(
+            kernel.name, kernel.kind, raw_full, jax.jit(raw_full),
+            jit_subset=jax.jit(raw_subset), frontier=kernel.frontier,
+        )
+
+    # vertex kernel
+    def raw_full(gba, state, scalars):
+        return _exec_kernel_full(
+            module, kernel, target, dict(gba, **statics), state, scalars
+        )
+
+    def raw_subset(gba, state, scalars, batch):
+        vids, valid = batch
+        ex = KernelExec(module, kernel, target, state, scalars, dict(gba, **statics))
+        lane = LaneCtx(n_lanes=vids.shape[0], bindings={kernel.vertex_param: vids},
+                       valid=valid)
+        ex.exec_block(kernel.func.body, lane, None)
+        return ex.commit()
+
+    return GenericLoweredKernel(
+        kernel.name, kernel.kind, raw_full, jax.jit(raw_full),
+        jit_subset=jax.jit(raw_subset) if not kernel.has_neighbor_loop else None,
         frontier=kernel.frontier,
     )

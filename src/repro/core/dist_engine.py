@@ -358,8 +358,12 @@ class DistEngine(Engine):
         argv: Optional[List[str]] = None,
         mesh: Optional[Mesh] = None,
         axis: str = "data",
+        *,
+        target=None,
+        library=None,
     ):
-        super().__init__(module, graph, options, argv=argv)
+        super().__init__(module, graph, options, argv=argv, target=target,
+                         library=library)
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis,))
         self.mesh = mesh
@@ -410,7 +414,9 @@ class DistEngine(Engine):
         step, out_prop, op, src_props = entry
         scalars = self._kernel_scalars(name)
         props = {p: self.state[p] for p in src_props}
-        red = step(props, scalars)[: self.graph.n_vertices]
+        red = self._timed_call(("dist", name), step, props, scalars)[
+            : self.graph.n_vertices
+        ]
         cur = self.state[out_prop]
         self.state[out_prop] = backend.combine(op, cur, red.astype(cur.dtype))
         self.stats.dist_supersteps += 1

@@ -21,7 +21,6 @@ Engine-level optimizations:
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -60,6 +59,13 @@ class EngineStats:
     edges_traversed: int = 0
     host_iterations: int = 0
     wall_time_s: float = 0.0
+    # cold-vs-warm split of wall_time_s: compile_time_s is the first-touch
+    # cost of every executable this run hit for the first time in-process
+    # (trace + XLA compile + its one execution); run_time_s is the warm
+    # remainder. An Accelerator-backed session starts pre-warmed (AOT), so
+    # warm-start wins show up directly as compile_time_s ~ 0.
+    compile_time_s: float = 0.0
+    run_time_s: float = 0.0
     # kernel-fusion accounting (the `fuse` MIR pass): how many launches hit
     # a fused kernel, and how many separate launches fusion saved overall
     fused_launches: int = 0
@@ -124,22 +130,40 @@ class Engine:
         graph: GraphData,
         options: Optional[CompileOptions] = None,
         argv: Optional[List[str]] = None,
+        *,
+        target=None,
+        library=None,
     ):
+        from .target import Target
+
         options = options if options is not None else CompileOptions()
         self.module = module
         self.options = options
+        # the execution substrate: an explicit Target (Accelerator path) or
+        # one resolved from the legacy CompileOptions substrate fields
+        self.target = target if target is not None else Target.from_options(options)
         self.argv = argv or []
         self.stats = EngineStats()
+        # AOT kernel library (repro.core.accelerator): shape-generic lowered
+        # kernels shared by every bind of one Accelerator
+        self.library = library
+        if library is not None:
+            library.check_graph(graph)
+        # executables already compiled in-process: first-touch timing keys.
+        # Library-backed engines share the library's registry, so a rebind
+        # of the same accelerator starts warm.
+        self._warm_keys = library.warm_keys if library is not None else set()
 
         # ---- hub cache: degree relabeling (paper Fig. 7(b)) ----
-        if options.cache:
+        if self.target.cache:
             self.graph, self.old2new = graph.relabel_by_degree()
             new2old = graph.degree_rank
         else:
             self.graph, self.old2new = graph, None
             new2old = None
 
-        self.gb = backend._graph_bindings(self.graph, module, options, new2old=new2old)
+        self.gb = backend._graph_bindings(self.graph, module, self.target,
+                                          new2old=new2old)
         self._lowered: Dict[str, backend.LoweredKernel] = {}
         self._subset_cache: Dict[Tuple[str, int], Callable] = {}
         # per-launch batching hooks: kernel name -> BatchedLaunch (built on
@@ -212,8 +236,27 @@ class Engine:
             k = self.module.kernels.get(name)
             if k is None:
                 raise EngineError(f"{name!r} is not a device kernel")
-            self._lowered[name] = backend.lower_kernel(self.module, k, self.gb, self.options)
+            if self.library is not None:
+                self._lowered[name] = self.library.kernel_for(name, self.gb)
+            else:
+                self._lowered[name] = backend.lower_kernel(
+                    self.module, k, self.gb, self.target
+                )
         return self._lowered[name]
+
+    def _timed_call(self, key, fn, *args):
+        """Call ``fn``; attribute a first-touch (cold) call's wall time to
+        ``stats.compile_time_s``. The warm-key registry survives reset()
+        (kernels stay compiled) and is shared across binds when a kernel
+        library backs this engine."""
+        if key in self._warm_keys:
+            return fn(*args)
+        t0 = time.perf_counter()
+        try:
+            return fn(*args)
+        finally:
+            self.stats.compile_time_s += time.perf_counter() - t0
+            self._warm_keys.add(key)
 
     def _kernel_scalars(self, name: str) -> Dict[str, jnp.ndarray]:
         k = self.module.kernels[name]
@@ -247,8 +290,15 @@ class Engine:
             kern = self.module.kernels.get(name)
             if kern is None:
                 raise EngineError(f"{name!r} is not a device kernel")
+            if self.library is not None:
+                # library-shared vmap trace: rebinds of one accelerator
+                # reuse every batch-size compilation (and the shared
+                # warm-key registry stays honest about it)
+                fn = self.library.batched_for(name, self.gb)
+            else:
+                fn = backend.lower_kernel_batched(self._kernel(name))
             bl = self._batched[name] = BatchedLaunch(
-                fn=backend.lower_kernel_batched(self._kernel(name)),
+                fn=fn,
                 bump_stats=self._full_stats_bump(kern),
             )
         return bl
@@ -277,7 +327,7 @@ class Engine:
         lk = self._kernel(name)
         scalars = self._kernel_scalars(name)
         if (
-            self.options.compact_frontier
+            self.target.compact_frontier
             and kern.kind is mir.KernelKind.EDGE
             # DENSE = compile-time verdict that the guard is loop-invariant:
             # skip host-side frontier mask evaluation entirely
@@ -293,42 +343,37 @@ class Engine:
             self.stats.edges_traversed += self.graph.n_edges
         elif isinstance(kern, mir.PipelineKernel):
             self.stats.edges_traversed += self.graph.n_edges * len(kern.edge_stages)
-        updates = lk.run_full(self.state, scalars)
+        updates = self._timed_call(("full", name), lk.run_full, self.state, scalars)
         self.state.update(updates)
 
     # -- frontier compaction (direction optimization, engine-automatic) ----
     def _batch_builder(self):
-        """Jitted device-side frontier expansion: active vertex ids ->
-        their CSR edge ranges, O(V + pad_e) work (never O(E))."""
+        """Frontier expansion bound to this graph's arrays.
+
+        The expansion math lives once, shape-generic, in
+        :func:`backend.make_frontier_builder`; library-backed engines share
+        the accelerator's builder (so same-bucket rebinds reuse every
+        compiled (pad_v, pad_e) bucket), plain engines build their own.
+        """
         if hasattr(self, "_build_batch"):
             return self._build_batch
         gb = self.gb
-        n_v = self.graph.n_vertices
-        n_e = self.graph.n_edges
         indptr, _, _ = self.graph.csr
         deg_dev = jnp.asarray(np.diff(indptr).astype(np.int32))
         starts_dev = jnp.asarray(indptr[:-1].astype(np.int32))
-        weighted = self.module.graph.weighted
+        if self.library is not None:
+            generic = self.library.frontier_builder()
+        else:
+            generic = backend.make_frontier_builder(
+                self.graph.n_vertices, self.graph.n_edges,
+                self.module.graph.weighted,
+            )
 
-        @functools.partial(jax.jit, static_argnames=("pad_v", "pad_e"))
         def build(mask, weights, pad_v, pad_e):
-            (act,) = jnp.nonzero(mask, size=pad_v, fill_value=n_v)  # O(V)
-            vok = act < n_v
-            act_c = jnp.minimum(act, n_v - 1)
-            deg_a = jnp.where(vok, deg_dev[act_c], 0)
-            starts = starts_dev[act_c]
-            cum = jnp.cumsum(deg_a) - deg_a
-            # ragged CSR-range expansion, O(pad_e)
-            src = jnp.repeat(act_c, deg_a, total_repeat_length=pad_e)
-            offs = jnp.repeat(cum, deg_a, total_repeat_length=pad_e)
-            base = jnp.repeat(starts, deg_a, total_repeat_length=pad_e)
-            pos = jnp.arange(pad_e, dtype=jnp.int32)
-            valid = pos < jnp.sum(deg_a)
-            slots = jnp.minimum(base + (pos - offs), n_e - 1)
-            dst = gb["csr_indices"][slots]
-            eid = gb["csr_eids"][slots]
-            w = weights[eid] if weighted else jnp.zeros((pad_e,), jnp.float32)
-            return src, dst, w, eid, valid
+            return generic(
+                deg_dev, starts_dev, gb["csr_indices"], gb["csr_eids"],
+                mask, weights, pad_v=pad_v, pad_e=pad_e,
+            )
 
         self._build_batch = build
         return build
@@ -350,8 +395,14 @@ class Engine:
         if pad_e > self.graph.n_edges:
             return False
         weights = self.state.get(WEIGHT_KEY, jnp.zeros((1,), jnp.float32))
-        batch = self._batch_builder()(jnp.asarray(mask), weights, pad_v, pad_e)
-        updates = lk.run_subset(self.state, scalars, batch)
+        batch = self._timed_call(
+            ("fbuild", pad_v, pad_e),
+            self._batch_builder(), jnp.asarray(mask), weights, pad_v, pad_e,
+        )
+        updates = self._timed_call(
+            ("subset", kern.name, pad_v, pad_e),
+            lk.run_subset, self.state, scalars, batch,
+        )
         self.state.update(updates)
         self.stats.compacted_launches += 1
         self.stats.edges_traversed += n_active_edges
@@ -413,6 +464,9 @@ class Engine:
         assert host is not None
         self._exec_host_block(host.main.body)
         self.stats.wall_time_s = time.perf_counter() - t0
+        self.stats.run_time_s = max(
+            0.0, self.stats.wall_time_s - self.stats.compile_time_s
+        )
         props = {}
         for p in self.module.properties.values():
             arr = np.asarray(self.state[p.name])

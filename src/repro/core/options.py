@@ -1,12 +1,12 @@
-"""Compilation options: which back-end optimizations to compose.
+"""Compilation options: front-end / middle-end concerns only.
 
-These mirror the ablation axes of paper Fig. 9 (Graphitron-withBurst /
--withCache / -withShuffle vs full Graphitron) plus the TPU-kernel routing
-switch. ``CompileOptions.baseline()`` is the "handcrafted HLS without
-optimizations" reference configuration from the paper's evaluation.
+Since the Target/Accelerator split, ``CompileOptions`` describes *what the
+compiler does to the program* — the MIR pass pipeline and compile-time
+scalar specialization — while :class:`~repro.core.target.Target` describes
+*where the result runs* (backend kind, device mesh, memory-access
+optimizations, partition/VMEM budget, Pallas routing, interpret mode).
 
-Two option groups interact with the compiler *middle-end* rather than the
-back-end:
+Two option groups remain here:
 
 * ``passes`` selects the MIR optimization pass pipeline that runs between
   semantic analysis and lowering (see :mod:`repro.core.passes`): kernel
@@ -24,65 +24,128 @@ back-end:
   expression (then simplifies), and the scalar disappears from the
   program's declared run-time parameters. Use it to specialize a kernel on
   a known-constant parameter (e.g. ``scalar_bindings=(("damp", 0.85),)``).
+
+Compat shim — the substrate fields that used to live here (``burst``,
+``cache``, ``shuffle``, ``compact_frontier``, ``pallas``,
+``n_partitions``, ``interpret``) are still accepted as constructor
+kwargs and still readable as attributes, but they are stored as
+``target_overrides`` and replayed onto a :class:`Target` by
+:meth:`Target.from_options` / :meth:`CompileOptions.resolve_target`.
+Overrides equal to the Target default are dropped at construction, so
+``CompileOptions(pallas=False) == CompileOptions()`` — cosmetic legacy
+kwargs never split the Program cache. ``CompileOptions.baseline()`` /
+``with_only()`` / ``full()`` (the paper Fig. 9 ablation axes) keep
+working through the shim; new code should build a :class:`Target`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
+from .target import DEFAULT_TARGET, LEGACY_OPTION_FIELDS, Target
 
-@dataclass(frozen=True)
+
+@dataclass(frozen=True, init=False)
 class CompileOptions:
-    # memory-access optimizations (paper §III-C3)
-    burst: bool = True  # partitioned, ascending-src streaming order
-    cache: bool = True  # hub-vertex relabeling (dense VMEM-prefix hub cache)
-    shuffle: bool = True  # dst-binned sorted segment reduction (conflict-free)
-    # pipeline optimizations (paper §III-C1/C2) are always-on semantics-level
-    # transforms (RAW decoupling, RMW normalization) — not toggles.
-    # frontier compaction: only traverse active edges (direction/frontier opt)
-    compact_frontier: bool = True
-    # route scatter-reduce / gather through Pallas TPU kernels
-    pallas: bool = False
-    # dst-range partitions target (VMEM sizing unit); 0 = auto
-    n_partitions: int = 0
-    # Pallas interpret mode: None = auto (interpreted unless a real TPU
-    # backend is present), True/False = forced
-    interpret: Optional[bool] = None
     # MIR optimization pass pipeline: "default" | "none" | "fuse,dce,..."
     passes: str = "default"
     # compile-time scalar bindings consumed by the `fold` pass
     scalar_bindings: Tuple[Tuple[str, object], ...] = ()
+    # legacy substrate kwargs, canonicalized: sorted, defaults dropped.
+    # Replayed onto Target by Target.from_options / resolve_target().
+    target_overrides: Tuple[Tuple[str, object], ...] = ()
+
+    def __init__(
+        self,
+        passes: str = "default",
+        scalar_bindings: Tuple[Tuple[str, object], ...] = (),
+        target_overrides: Tuple[Tuple[str, object], ...] = (),
+        **legacy,
+    ):
+        unknown = sorted(set(legacy) - set(LEGACY_OPTION_FIELDS))
+        if unknown:
+            raise TypeError(
+                f"unknown CompileOptions field(s) {unknown}; substrate fields "
+                f"moved to repro.Target — the accepted legacy kwargs are "
+                f"{list(LEGACY_OPTION_FIELDS)}"
+            )
+        merged = dict(target_overrides)
+        merged.update(legacy)
+        # canonicalize: drop overrides that equal the Target default so
+        # cosmetic legacy kwargs don't split the Program cache
+        canon = tuple(sorted(
+            (k, v) for k, v in merged.items()
+            if v != getattr(DEFAULT_TARGET, k)
+        ))
+        object.__setattr__(self, "passes", passes)
+        object.__setattr__(self, "scalar_bindings", tuple(scalar_bindings))
+        object.__setattr__(self, "target_overrides", canon)
+
+    # -- target resolution ----------------------------------------------------
+    def resolve_target(self, kind: str = "local", **overrides) -> Target:
+        """The Target these options imply (legacy overrides replayed)."""
+        return Target.from_options(self, kind=kind, **overrides)
+
+    def _target_value(self, name: str):
+        for k, v in self.target_overrides:
+            if k == name:
+                return v
+        return getattr(DEFAULT_TARGET, name)
+
+    # legacy attribute surface (kept so existing engines/tests/benchmarks
+    # reading options.burst etc. run unchanged against either object)
+    @property
+    def burst(self) -> bool:
+        return self._target_value("burst")
+
+    @property
+    def cache(self) -> bool:
+        return self._target_value("cache")
+
+    @property
+    def shuffle(self) -> bool:
+        return self._target_value("shuffle")
+
+    @property
+    def compact_frontier(self) -> bool:
+        return self._target_value("compact_frontier")
+
+    @property
+    def pallas(self) -> bool:
+        return self._target_value("pallas")
+
+    @property
+    def n_partitions(self) -> int:
+        return self._target_value("n_partitions")
+
+    @property
+    def interpret(self) -> Optional[bool]:
+        return self._target_value("interpret")
 
     @property
     def interpret_effective(self) -> bool:
-        """Resolve ``interpret=None`` to the platform default.
+        return self.resolve_target().interpret_effective
 
-        Pallas kernels must run interpreted on CPU (CI), but interpreting
-        on a real TPU would silently deoptimize device runs — so auto
-        means "interpret unless jax is actually backed by a TPU".
-        """
-        if self.interpret is not None:
-            return self.interpret
-        import jax
-
-        return jax.default_backend() != "tpu"
-
+    # -- ablation constructors (paper Fig. 9) ---------------------------------
     @staticmethod
     def baseline() -> "CompileOptions":
         """Unoptimized reference: random scatter, no partitioning/caching,
         no MIR passes — one kernel per launch, exactly as authored."""
         return CompileOptions(
-            burst=False, cache=False, shuffle=False, compact_frontier=False,
-            pallas=False, passes="none",
+            passes="none", burst=False, cache=False, shuffle=False,
+            compact_frontier=False, pallas=False,
         )
 
     @staticmethod
     def with_only(opt: str) -> "CompileOptions":
         """Fig. 9 ablation points: exactly one memory optimization enabled."""
-        base = CompileOptions.baseline()
         if opt not in ("burst", "cache", "shuffle"):
             raise ValueError(f"unknown ablation axis {opt!r}")
-        return replace(base, **{opt: True})
+        base = CompileOptions.baseline()
+        over = dict(base.target_overrides)
+        over[opt] = True
+        return CompileOptions(passes=base.passes,
+                              target_overrides=tuple(sorted(over.items())))
 
     @staticmethod
     def full(pallas: bool = False) -> "CompileOptions":

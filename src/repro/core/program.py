@@ -49,6 +49,7 @@ from __future__ import annotations
 import hashlib
 import numbers
 import threading
+from collections import OrderedDict, namedtuple
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple, TYPE_CHECKING
 
@@ -60,7 +61,9 @@ from .parser import ParseError, parse
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from ..frontend import GraphProgram
     from ..graph.storage import GraphData
+    from .accelerator import Accelerator, GraphShape
     from .session import BatchSession, Session, SessionPool
+    from .target import Target
 
 
 class ProgramError(Exception):
@@ -218,13 +221,45 @@ class Program:
                 )
         return out
 
+    # -- lowering (Accelerator artifacts) ------------------------------------
+    def lower(self, target: "Optional[Target]" = None,
+              shape: "Optional[GraphShape]" = None, *,
+              graph: "Optional[GraphData]" = None) -> "Accelerator":
+        """AOT-lower this program for a (target, shape bucket).
+
+        The returned :class:`~repro.core.accelerator.Accelerator` has every
+        kernel compiled against the bucket's buffer shapes — graph bindings
+        are runtime arguments, so ``accelerator.bind(g)`` is a shape check
+        only and any number of same-bucket graphs share the lowering. Pass
+        either an explicit ``shape=GraphShape(n_vertices=..., n_edges=...,
+        weighted=...)`` or ``graph=`` to take the bucket from a concrete
+        graph. ``target`` defaults to the Target implied by this program's
+        CompileOptions (legacy substrate kwargs included).
+        """
+        from .accelerator import Accelerator, GraphShape
+        from .target import Target
+
+        if shape is None:
+            if graph is None:
+                raise ProgramError(
+                    "Program.lower needs a shape bucket: pass "
+                    "shape=GraphShape(...) or graph=<GraphData>"
+                )
+            shape = GraphShape.of(graph)
+        if target is None:
+            target = Target.from_options(self.options)
+        return Accelerator(self, target, shape)
+
     # -- binding ------------------------------------------------------------
     def bind(self, graph: "GraphData", backend: str = "local", *,
              argv: Optional[list] = None, **backend_opts) -> "Session":
         """Place this program onto ``graph`` using the named backend.
 
         The returned :class:`Session` owns the lowered kernels and device
-        state and is reusable across many parameterized runs.
+        state and is reusable across many parameterized runs. (For
+        compile-once / deploy-many serving, prefer
+        ``program.lower(target, shape).bind(graph)`` — the Accelerator
+        pays kernel compilation once per shape bucket, offline.)
         """
         from .session import Session
 
@@ -259,20 +294,102 @@ class Program:
 
 
 # ---------------------------------------------------------------------------
-# content-hashed program cache
+# content-hashed program cache (bounded LRU)
 # ---------------------------------------------------------------------------
+
+
+class _LRU:
+    """A small LRU map with functools-style counters.
+
+    NOT internally locked — all access goes through ``_CACHE_LOCK`` below
+    (the caches cross-reference each other, so one lock is simplest).
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._od: "OrderedDict[str, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        if key is None or key not in self._od:
+            self.misses += 1
+            return None
+        self._od.move_to_end(key)
+        self.hits += 1
+        return self._od[key]
+
+    def setdefault(self, key, value):
+        cur = self._od.get(key)
+        if cur is not None:
+            self._od.move_to_end(key)
+            return cur
+        self._od[key] = value
+        self._evict()
+        return value
+
+    def put(self, key, value):
+        self._od[key] = value
+        self._od.move_to_end(key)
+        self._evict()
+
+    def _evict(self):
+        while len(self._od) > self.maxsize:
+            self._od.popitem(last=False)
+            self.evictions += 1
+
+    def resize(self, maxsize: int):
+        self.maxsize = maxsize
+        self._evict()
+
+    def clear(self):
+        self._od.clear()
+        self.hits = self.misses = self.evictions = 0
+
+    def __len__(self):
+        return len(self._od)
+
+    def __contains__(self, key):
+        return key in self._od
+
+
+#: Default Program cache bound: many-tenant serving compiles many distinct
+#: programs over one process lifetime; an unbounded dict is a slow leak.
+DEFAULT_PROGRAM_CACHE_SIZE = 64
 
 # keyed by program_fingerprint(mir_key, options): the canonical MIR hash
 # folds in every semantic detail of the program while being front-end
 # independent, so `compile(text)` and `compile(embedded_twin)` alias
-_PROGRAM_CACHE: Dict[str, Program] = {}
+_PROGRAM_CACHE = _LRU(DEFAULT_PROGRAM_CACHE_SIZE)
 # the analyzed MIR module is options-independent: cache it on the MIR
 # fingerprint alone so ablation sweeps over options don't re-run analysis
-_MODULE_CACHE: Dict[str, mir.Module] = {}
+_MODULE_CACHE = _LRU(DEFAULT_PROGRAM_CACHE_SIZE)
 # memo: sha256(raw text) -> MIR fingerprint, so recompiling the same text
 # string skips the lexer/parser/analyzer entirely
-_TEXT_KEYS: Dict[str, str] = {}
+_TEXT_KEYS = _LRU(DEFAULT_PROGRAM_CACHE_SIZE)
 _CACHE_LOCK = threading.Lock()
+
+ProgramCacheInfo = namedtuple(
+    "ProgramCacheInfo", ["hits", "misses", "evictions", "maxsize", "currsize"]
+)
+
+
+def program_cache_info() -> ProgramCacheInfo:
+    """functools-style counters of the compiled-Program LRU cache."""
+    with _CACHE_LOCK:
+        c = _PROGRAM_CACHE
+        return ProgramCacheInfo(c.hits, c.misses, c.evictions, c.maxsize, len(c))
+
+
+def set_program_cache_limit(maxsize: int) -> None:
+    """Resize the Program cache (module/text memos track the same bound)."""
+    if maxsize < 1:
+        raise ValueError("program cache size must be >= 1")
+    with _CACHE_LOCK:
+        _PROGRAM_CACHE.resize(maxsize)
+        _MODULE_CACHE.resize(maxsize)
+        _TEXT_KEYS.resize(maxsize)
 
 
 def _analyze_text(src: str) -> Tuple[mir.Module, str]:
@@ -295,7 +412,7 @@ def _analyze_text(src: str) -> Tuple[mir.Module, str]:
     with _CACHE_LOCK:
         # another thread may have raced us; keep the first base module
         module = _MODULE_CACHE.setdefault(mir_key, module)
-        _TEXT_KEYS[src_key] = mir_key
+        _TEXT_KEYS.put(src_key, mir_key)
     return module, mir_key
 
 

@@ -87,18 +87,27 @@ class EngineBackend:
 
 
 def LocalBackend(program: Program, graph: GraphData,
-                 argv: Optional[list] = None) -> EngineBackend:
-    """Single-device execution: the paper's one-accelerator system."""
+                 argv: Optional[list] = None, target=None,
+                 library=None) -> EngineBackend:
+    """Single-device execution: the paper's one-accelerator system.
+
+    ``target`` pins the execution substrate explicitly (otherwise resolved
+    from the program's CompileOptions); ``library`` is an AOT kernel
+    library from :meth:`repro.core.accelerator.Accelerator` — when given,
+    the engine starts warm (no per-bind jit compilation).
+    """
     from .engine import Engine
 
     return EngineBackend(
-        "local", Engine(program.module, graph, program.options, argv=argv)
+        "local",
+        Engine(program.module, graph, program.options, argv=argv,
+               target=target, library=library),
     )
 
 
 def DistributedBackend(program: Program, graph: GraphData,
                        argv: Optional[list] = None, mesh=None,
-                       axis: str = "data") -> EngineBackend:
+                       axis: str = "data", target=None) -> EngineBackend:
     """Multi-device execution: edge kernels become shuffle supersteps
     across the device mesh (ForeGraph-style multi-accelerator scaling)."""
     from .dist_engine import DistEngine
@@ -106,7 +115,7 @@ def DistributedBackend(program: Program, graph: GraphData,
     return EngineBackend(
         "distributed",
         DistEngine(program.module, graph, program.options, argv=argv,
-                   mesh=mesh, axis=axis),
+                   mesh=mesh, axis=axis, target=target),
     )
 
 

@@ -23,6 +23,29 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+# int32 indptr covers edge counts below 2^31; the device ABI (and AOT shape
+# signatures) standardize every CSR/CSC array on int32, so larger graphs
+# must be sharded rather than silently widened to int64
+MAX_INT32_EDGES = 2**31
+
+
+def _indptr_from_degrees(degrees: np.ndarray, n_edges: int) -> np.ndarray:
+    """int32 CSR/CSC indptr from a degree vector, with an overflow guard.
+
+    Keeping indptr int32 (like indices/edge_perm) keeps device buffers and
+    AOT shape signatures stable; E >= 2^31 cannot be represented and fails
+    loudly here instead of wrapping.
+    """
+    if n_edges >= MAX_INT32_EDGES:
+        raise OverflowError(
+            f"graph has {n_edges} edges; int32 indptr covers < 2^31 "
+            f"({MAX_INT32_EDGES}). Shard the graph (distributed backend) "
+            f"instead of widening the device ABI."
+        )
+    indptr = np.zeros(degrees.shape[0] + 1, dtype=np.int64)
+    np.cumsum(degrees, out=indptr[1:])
+    return indptr.astype(np.int32)
+
 
 @dataclass
 class GraphData:
@@ -61,23 +84,27 @@ class GraphData:
     # -- CSR (out-edges) ------------------------------------------------------
     @cached_property
     def csr(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(indptr[V+1], indices[E], edge_perm[E]): out-adjacency.
+        """(indptr[V+1], indices[E], edge_perm[E]): out-adjacency, all int32.
 
         ``edge_perm`` maps CSR slot -> original edge id, so edge weights /
         edge properties can be gathered for neighbor iteration.
         """
         order = np.argsort(self.src, kind="stable").astype(np.int32)
-        indptr = np.zeros(self.n_vertices + 1, dtype=np.int64)
-        np.cumsum(self.out_degree, out=indptr[1:])
-        return indptr, self.dst[order], order
+        return (
+            _indptr_from_degrees(self.out_degree, self.n_edges),
+            self.dst[order],
+            order,
+        )
 
     @cached_property
     def csc(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """(indptr, indices, edge_perm): in-adjacency (pull direction)."""
+        """(indptr, indices, edge_perm): in-adjacency (pull), all int32."""
         order = np.argsort(self.dst, kind="stable").astype(np.int32)
-        indptr = np.zeros(self.n_vertices + 1, dtype=np.int64)
-        np.cumsum(self.in_degree, out=indptr[1:])
-        return indptr, self.src[order], order
+        return (
+            _indptr_from_degrees(self.in_degree, self.n_edges),
+            self.src[order],
+            order,
+        )
 
     @cached_property
     def row_ids(self) -> np.ndarray:
@@ -153,6 +180,51 @@ class GraphData:
         if self.weighted:
             return self
         return GraphData(self.n_vertices, self.src, self.dst, np.ones(self.n_edges, np.float32))
+
+    def pad_to(self, n_vertices: int, n_edges: int) -> "GraphData":
+        """Pad to a shape bucket: isolated vertices + padding self-loops.
+
+        The accelerator artifact path (:meth:`repro.Program.lower`) compiles
+        against a :class:`~repro.core.accelerator.GraphShape` bucket; graphs
+        below the bucket are padded up so they share one lowering. Padding
+        edges are self-loops on the LAST padding vertex, so no real vertex's
+        degree or neighborhood changes.
+
+        The result IS a different graph, though: algorithms whose semantics
+        depend on global aggregates — ``vertices.size()`` normalization
+        (PageRank's 1/|V| teleport mass, PPR), whole-vertexset reductions —
+        observe the padded |V|/|E| and their per-vertex numbers shift
+        accordingly. Locally-defined results (BFS levels, SSSP distances,
+        WCC labels, k-core, degrees) are unchanged on the real id range.
+        Always compare padded runs against padded runs; the equivalence
+        guarantee of the Accelerator path is "same padded graph, same
+        results", never "padded equals unpadded".
+        """
+        pad_v = n_vertices - self.n_vertices
+        pad_e = n_edges - self.n_edges
+        if pad_v < 0 or pad_e < 0:
+            raise ValueError(
+                f"pad_to target (|V|={n_vertices}, |E|={n_edges}) is smaller "
+                f"than the graph (|V|={self.n_vertices}, |E|={self.n_edges})"
+            )
+        if pad_v == 0 and pad_e == 0:
+            return self
+        if pad_e > 0 and pad_v == 0:
+            raise ValueError(
+                "padding edges need at least one padding vertex to carry the "
+                "self-loops (a self-loop on a real vertex would change its "
+                "degree); pad n_vertices by >= 1 too"
+            )
+        loop = np.full(pad_e, n_vertices - 1, dtype=np.int32)
+        src = np.concatenate([self.src, loop])
+        dst = np.concatenate([self.dst, loop])
+        w = None
+        if self.weights is not None:
+            w = np.concatenate([
+                self.weights,
+                np.ones(pad_e, dtype=self.weights.dtype),
+            ])
+        return GraphData(n_vertices, src, dst, w)
 
 
 @dataclass

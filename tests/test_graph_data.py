@@ -95,3 +95,51 @@ def test_edge_list_loader(tmp_path):
     g = generators.load_edge_list(str(p))
     assert g.n_vertices == 3 and g.n_edges == 3 and g.weighted
     np.testing.assert_allclose(g.weights, [2.5, 1.0, 3.5])
+
+
+# ---------------------------------------------------------------------------
+# device-ABI dtype stability (int32 CSR/CSC) + shape-bucket padding
+# ---------------------------------------------------------------------------
+
+
+def test_csr_csc_all_int32():
+    """Regression: indptr used to be int64 while indices/edge_perm were
+    int32 — device buffers and AOT shape signatures need one stable ABI."""
+    g = generators.power_law(200, 1500, seed=3)
+    for indptr, indices, eids in (g.csr, g.csc):
+        assert indptr.dtype == np.int32, "indptr must be int32"
+        assert indices.dtype == np.int32
+        assert eids.dtype == np.int32
+    assert g.src.dtype == np.int32 and g.dst.dtype == np.int32
+    assert g.csr[0][-1] == g.n_edges and g.csc[0][-1] == g.n_edges
+
+
+def test_indptr_overflow_guard():
+    from repro.graph.storage import MAX_INT32_EDGES, _indptr_from_degrees
+
+    deg = np.array([1, 2, 3], dtype=np.int64)
+    out = _indptr_from_degrees(deg, 6)
+    assert out.dtype == np.int32
+    np.testing.assert_array_equal(out, [0, 1, 3, 6])
+    with pytest.raises(OverflowError, match="int32 indptr"):
+        _indptr_from_degrees(deg, MAX_INT32_EDGES)
+
+
+def test_pad_to_bucket():
+    g = generators.power_law(100, 700, seed=1, weighted=True)
+    p = g.pad_to(128, 768)
+    assert (p.n_vertices, p.n_edges) == (128, 768)
+    # real edges untouched, padding edges are self-loops on the last vertex
+    np.testing.assert_array_equal(p.src[:700], g.src)
+    np.testing.assert_array_equal(p.dst[:700], g.dst)
+    assert (p.src[700:] == 127).all() and (p.dst[700:] == 127).all()
+    np.testing.assert_array_equal(p.weights[:700], g.weights)
+    # real vertices keep their degrees
+    np.testing.assert_array_equal(p.out_degree[:100], g.out_degree)
+    np.testing.assert_array_equal(p.in_degree[:100], g.in_degree)
+    # no-op and error cases
+    assert g.pad_to(100, 700) is g
+    with pytest.raises(ValueError, match="smaller"):
+        g.pad_to(50, 700)
+    with pytest.raises(ValueError, match="padding vertex"):
+        g.pad_to(100, 768)
