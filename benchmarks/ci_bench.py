@@ -10,6 +10,10 @@ Two modes:
   K parameterized queries answered sequentially vs through one
   ``BatchSession`` execution (bfs_batched64: 64 BFS roots; pagerank_batched8:
   8 query batches) and records the wall-time speedup plus the launch ratio.
+  A ``streaming`` section (bfs_incremental) applies a 1% additions-only
+  GraphDelta through a StreamingSession and gates incremental repair at
+  >= 3x over a warm full recompute, with zero re-lowering and bit-identical
+  results.
 
 * ``--check``: compares a freshly written ``BENCH_ci.json`` against the
   committed ``BENCH_baseline.json`` and exits non-zero when any workload's
@@ -174,6 +178,72 @@ def _time_warm_bind():
     }
 
 
+def _time_streaming():
+    """Streaming incremental-recompute gate: after an additions-only delta
+    of ~1% of |E|, a repeated BFS query answered by incremental repair must
+    beat a warm full recompute by >= 3x — and must perform **zero**
+    re-lowering (``stats.compile_time_s == 0``: in-bucket updates rebind
+    the Accelerator's AOT executables, never recompile). Both sides are
+    measured within one run on the same machine, so the floor is
+    machine-independent and fatal.
+    """
+    import numpy as np
+
+    import repro
+    from repro.algorithms import sources
+    from repro.core.program import clear_program_cache
+    from repro.graph import generators
+    from repro.graph.storage import GraphDelta
+    from repro.streaming import StreamingSession
+
+    clear_program_cache()
+    base = generators.power_law(2000, 16000, seed=0)
+    root = int(np.argmax(base.out_degree))
+    program = repro.compile(sources.BFS_ECP)
+    acc = program.lower(graph=base, bucket=True)
+    graph = base.pad_to(acc.shape.n_vertices, acc.shape.n_edges)
+    rng = np.random.default_rng(9)
+    n_add = max(1, base.n_edges // 100)  # 1% edge delta
+    session = StreamingSession(program, graph, accelerator=acc)
+    session.run(root=root)  # warm-up: AOT executables touched, result cached
+
+    delta = GraphDelta(added_edges=rng.integers(
+        0, base.n_vertices, size=(n_add, 2)).astype(np.int32))
+    t0 = time.perf_counter()
+    session.update(delta)
+    update_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    inc_res = session.run(root=root)  # incremental repair of the cached result
+    inc_s = time.perf_counter() - t0
+    assert session.incremental_runs == 1, "repair path was not taken"
+
+    # referee: warm full recompute on the SAME updated graph (steady-state
+    # best-of-3 through the same warm accelerator library)
+    full_session = acc.bind(session.graph)
+    full_res = full_session.run(root=root)
+    full_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        full_res = full_session.run(root=root)
+        full_s = min(full_s, time.perf_counter() - t0)
+    identical = all(
+        np.array_equal(inc_res.properties[p], full_res.properties[p])
+        for p in full_res.properties
+    )
+    session.close()
+    return {
+        "n_added": n_add,
+        "update_apply_s": round(update_s, 4),
+        "incremental_s": round(inc_s, 4),
+        "full_recompute_s": round(full_s, 4),
+        "incremental_speedup": round(full_s / max(inc_s, 1e-9), 3),
+        "speedup_floor": 3.0,
+        "repair_compile_time_s": round(inc_res.stats.compile_time_s, 4),
+        "bit_identical": identical,
+    }
+
+
 def _time_workload(src, graph, params, options):
     """(cold compile+bind+first-run seconds, warm best-of-3 seconds, stats)."""
     import repro
@@ -225,6 +295,7 @@ def measure() -> dict:
     for name, (src, graph, sets, floor) in _batched_workloads().items():
         out["batched"][name] = _time_batched(src, graph, sets, floor)
     out["warm_bind"] = {"bfs_warm_bind": _time_warm_bind()}
+    out["streaming"] = {"bfs_incremental": _time_streaming()}
     return out
 
 
@@ -332,6 +403,45 @@ def check(ci: dict, baseline: dict, threshold: float) -> int:
             failures.append(f"REGRESSION {line} < {floor}x acceptance floor")
         else:
             print(f"ok   {line}")
+    # streaming incremental gates: within-run speedup + the zero-re-lowering
+    # and bit-identity invariants; all machine-independent, always fatal
+    base_stream = baseline.get("streaming", {})
+    ci_stream = ci.get("streaming", {})
+    for name in sorted(set(ci_stream) - set(base_stream)):
+        failures.append(
+            f"{name}: streaming workload measured but absent from the "
+            f"baseline — refresh BENCH_baseline.json to gate it"
+        )
+    for name in sorted(base_stream):
+        got = ci_stream.get(name)
+        if got is None:
+            failures.append(f"{name}: streaming workload missing from current run")
+            continue
+        speedup = got.get("incremental_speedup", 0.0)
+        floor = got.get("speedup_floor") or base_stream[name].get("speedup_floor")
+        line = (f"{name}.incremental_speedup: {speedup:.2f}x over full "
+                f"recompute (repair {got.get('incremental_s')}s vs "
+                f"{got.get('full_recompute_s')}s after "
+                f"{got.get('n_added')} added edges)")
+        if floor is not None and speedup < floor:
+            failures.append(f"REGRESSION {line} < {floor}x acceptance floor")
+        else:
+            print(f"ok   {line}")
+        if got.get("repair_compile_time_s", 0.0) != 0.0:
+            failures.append(
+                f"REGRESSION {name}: incremental repair re-lowered kernels "
+                f"(compile_time_s={got.get('repair_compile_time_s')}, "
+                f"expected 0 — in-bucket updates must be rebind-only)"
+            )
+        else:
+            print(f"ok   {name}.repair_compile_time_s: 0 (rebind-only)")
+        if not got.get("bit_identical", False):
+            failures.append(
+                f"REGRESSION {name}: incremental result diverged from "
+                f"full recompute"
+            )
+        else:
+            print(f"ok   {name}.bit_identical: true")
     for w in warnings:
         print(w)
     for f in failures:

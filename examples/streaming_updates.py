@@ -1,0 +1,65 @@
+"""Quickstart for streaming graph updates + incremental recomputation.
+
+    PYTHONPATH=src python examples/streaming_updates.py
+
+Static sessions bind an immutable graph; a `StreamingSession` serves a
+graph that keeps changing. Edge additions/removals arrive as `GraphDelta`s
+and are applied **in place** into the padding slack of the graph's shape
+bucket (`GraphShape.bucket_for` + `pad_to`), so the physical buffers — and
+the lowered kernels — never change: an update is a shape-check-only rebind,
+not a recompile. Monotone programs (BFS / SSSP / connected components,
+detected from the MIR's min=/max= reductions) answer repeated queries after
+an update by *incrementally repairing* the cached result from the delta's
+endpoints, bit-identical to a from-scratch run; non-monotone programs
+(PageRank) transparently fall back to a full re-run.
+"""
+import time
+
+import numpy as np
+
+import repro
+from repro.algorithms import sources
+from repro.graph import generators
+
+rng = np.random.default_rng(7)
+
+# ---- bind a bucket-padded graph so updates have slack to land in ---------
+base = generators.power_law(2000, 16000, seed=0)
+program = repro.compile(sources.BFS_ECP)
+accelerator = program.lower(graph=base, bucket=True)  # geometric bucket
+graph = base.pad_to(accelerator.shape.n_vertices, accelerator.shape.n_edges)
+print(f"graph |V|={base.n_vertices} |E|={base.n_edges} padded into bucket "
+      f"{accelerator.shape.n_vertices}x{accelerator.shape.n_edges}")
+
+session = repro.StreamingSession(program, graph, accelerator=accelerator)
+first = session.run(root=3)
+print(f"version 0: BFS from root=3 reached "
+      f"{int((np.asarray(first.properties['old_level']) >= 0).sum())} vertices")
+
+# ---- stream additions: in-place apply, zero re-lowering ------------------
+for step in range(3):
+    delta = repro.GraphDelta(
+        added_edges=rng.integers(0, base.n_vertices, size=(160, 2)).astype(np.int32)
+    )
+    t0 = time.perf_counter()
+    version = session.update(delta)
+    apply_ms = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    repaired = session.run(root=3)  # incremental repair of the cached result
+    repair_ms = (time.perf_counter() - t0) * 1e3
+
+    scratch = program.bind(session.graph).run(root=3)  # independent referee
+    assert all(
+        np.array_equal(repaired.properties[p], scratch.properties[p])
+        for p in scratch.properties
+    ), "incremental result must be bit-identical to from-scratch"
+    assert repaired.stats.compile_time_s == 0.0, "updates must not re-lower"
+    print(f"version {version}: +{delta.n_added} edges applied in "
+          f"{apply_ms:.1f}ms, query repaired in {repair_ms:.2f}ms "
+          f"(bit-identical to from-scratch)")
+
+print(f"paths taken: {session.cache_hits} cache hits, "
+      f"{session.incremental_runs} incremental repairs, "
+      f"{session.full_runs} full runs")
+session.close()

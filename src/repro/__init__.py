@@ -42,8 +42,10 @@ from .core import (  # noqa: F401 - re-exported public API
     set_program_cache_limit,
 )
 from .frontend import FrontendError, GraphProgram  # noqa: F401
+from .graph.storage import GraphDelta, GraphUpdateError  # noqa: F401
+from .streaming import StreamingSession  # noqa: F401
 
-__version__ = "0.4.0"
+__version__ = "0.5.0"
 
 __all__ = [
     "CompileOptions",
@@ -59,6 +61,9 @@ __all__ = [
     "BatchSession",
     "Session",
     "SessionPool",
+    "StreamingSession",
+    "GraphDelta",
+    "GraphUpdateError",
     "compile",
     "compile_program",
     "program_cache_info",

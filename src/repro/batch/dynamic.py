@@ -66,6 +66,7 @@ class DynamicBatcher:
         self.stats = BatchServeStats(max_batch=max_batch)
         self._pending: "deque[Tuple[Dict[str, Any], Future]]" = deque()
         self._cond = threading.Condition()
+        self._in_flight = 0  # queries handed to run_many, not yet resolved
         self._closed = False
         self._worker = threading.Thread(
             target=self._loop, name="repro-batch-collector", daemon=True
@@ -104,6 +105,7 @@ class DynamicBatcher:
                 and frozenset(self._pending[0][0]) == sig
             ):
                 items.append(self._pending.popleft())
+            self._in_flight += len(items)
             return items
 
     def _loop(self) -> None:
@@ -117,12 +119,35 @@ class DynamicBatcher:
             except BaseException as exc:  # surface to every waiter
                 for _, fut in items:
                     fut.set_exception(exc)
+                self._settle(len(items))
                 continue
             self.stats.batches += 1
             self.stats.queries += len(items)
             self.stats.sizes.append(len(items))
             for (_, fut), res in zip(items, results):
                 fut.set_result(res)
+            self._settle(len(items))
+
+    def _settle(self, n: int) -> None:
+        with self._cond:
+            self._in_flight -= n
+            self._cond.notify_all()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until no query is queued or in flight; True on success.
+
+        The streaming update path calls this (with no new submissions
+        racing in — its write gate has already closed the front door) so a
+        graph rebind never interleaves with a half-collected batch.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._pending or self._in_flight:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cond.wait(timeout=remaining)
+            return True
 
     def close(self, wait: bool = True) -> None:
         """Stop accepting queries; drain what is already queued."""

@@ -111,6 +111,16 @@ class BatchEngine:
         self.batch_size = 0
         self._msbfs_plan: Any = False  # False = not yet matched
 
+    def refresh_graph(self):
+        """Re-point at the inner engine's graph after engine.refresh_graph().
+
+        The inner engine rebuilds its relabeled graph object on refresh;
+        this wrapper only snapshots the reference (the msbfs plan is
+        module-derived and the batched launch closures live on the inner
+        engine, which already dropped them).
+        """
+        self.graph = self.engine.graph
+
     # ------------------------------------------------------------------
     # entry point
     # ------------------------------------------------------------------
@@ -412,9 +422,11 @@ class BatchEngine:
         name = obj.name if isinstance(obj, fir.Ident) else None
         g = self.module.graph
         if e.method == "size":
+            # logical counts, mirroring Engine._host_method: padding is
+            # invisible to size()-normalized math
             if name == g.edgeset_name:
-                return self.graph.n_edges
-            return self.graph.n_vertices
+                return self.graph.n_edges_logical
+            return self.graph.n_vertices_logical
         if e.method in ("init", "process"):
             fn = e.args[0]
             if not isinstance(fn, fir.Ident):

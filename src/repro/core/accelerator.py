@@ -57,7 +57,10 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guards
     from .program import Program
     from .session import BatchSession, Session, SessionPool
 
-ARTIFACT_FORMAT = 1
+# format 2: logical_counts joined GB_ARRAY_KEYS (size() reads unpadded
+# counts), changing the AOT executable signature — format-1 artifacts are
+# rejected and re-lowered
+ARTIFACT_FORMAT = 2
 MANIFEST_NAME = "manifest.json"
 
 
@@ -116,6 +119,36 @@ class GraphShape:
 
         return GraphShape(up(self.n_vertices, v_round),
                           up(self.n_edges, e_round), self.weighted)
+
+    @classmethod
+    def bucket_for(cls, n_vertices: int, n_edges: int, weighted: bool = False,
+                   *, headroom: float = 0.125, ratio: float = 1.25,
+                   v_base: int = 1024, e_base: int = 4096) -> "GraphShape":
+        """Geometric shape bucket for a (possibly growing) logical graph.
+
+        Linear rounding (:meth:`bucketed`) re-buckets every ``e_round``
+        added edges — a stream of small deltas would churn lowerings.
+        Geometric rounding grows buckets by ``ratio`` steps above a base,
+        after adding ``headroom`` slack, so the number of distinct buckets
+        (= lowerings) over any growth trajectory is logarithmic, and every
+        fresh bucket arrives with free padding slots for
+        :meth:`GraphData.apply_updates` to consume. Deterministic integer
+        iteration — no float-log boundary jitter.
+        """
+        if n_vertices < 1 or n_edges < 1:
+            raise ValueError("bucket_for needs n_vertices >= 1 and n_edges >= 1")
+
+        def up(n: int, base: int) -> int:
+            n = n + (n * int(headroom * 1024)) // 1024  # integer headroom
+            b = base
+            while b < n:
+                b = max(b + 1, int(b * ratio))
+            return b
+
+        bv, be = up(n_vertices, v_base), up(n_edges, e_base)
+        if be > n_edges and bv <= n_vertices:
+            bv = max(bv + 1, int(bv * ratio))  # padded edges need a pad vertex
+        return cls(bv, be, weighted)
 
     def accepts(self, graph: "GraphData") -> bool:
         return GraphShape.of(graph) == self
@@ -503,8 +536,9 @@ class Accelerator:
         module = self.program.module
         state_bytes = _module_state_bytes(module, self.shape)
         gb_bytes = 4 * (
-            (len(backend.GB_ARRAY_KEYS) - 1) * self.shape.n_edges
+            (len(backend.GB_ARRAY_KEYS) - 2) * self.shape.n_edges
             + self.shape.n_vertices  # orig_id is [V]
+            + 2  # logical_counts is [2]
         )
         temps = [k.temp_bytes or 0 for k in self._plans]
         outs = [k.out_bytes or 0 for k in self._plans]

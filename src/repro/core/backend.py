@@ -217,8 +217,16 @@ class KernelExec:
         if isinstance(e, fir.MethodCall):
             if e.method == "size":
                 name = _obj_name(e.obj)
+                # logical (unpadded) counts, traced so one AOT executable
+                # serves every graph of the bucket; globally-normalized
+                # algorithms (PageRank 1/|V|) thus agree padded vs unpadded
+                lc = self.graph_bind.get("logical_counts")
                 if name == self.module.graph.edgeset_name:
+                    if lc is not None:
+                        return lc[1]
                     return jnp.int32(self.graph_bind["n_edges"])
+                if lc is not None:
+                    return lc[0]
                 return jnp.int32(self.graph_bind["n_vertices"])
             raise BackendError(f"method {e.method!r} not allowed inside kernels")
         raise BackendError(f"cannot evaluate {type(e).__name__} in kernel")
@@ -514,12 +522,13 @@ class LoweredKernel:
 # graph-binding entries that are device arrays (as opposed to the static
 # n_vertices/n_edges ints). Shape-generic (AOT) lowering passes exactly
 # these as traced arguments so one executable serves every graph of a
-# shape bucket; all are int32, [E]-shaped except orig_id ([V]).
+# shape bucket; all are int32, [E]-shaped except orig_id ([V]) and
+# logical_counts ([2]: unpadded |V|, |E| — what size() reports).
 GB_ARRAY_KEYS: Tuple[str, ...] = (
     "order", "src", "dst", "dst_sort_perm",
     "csr_row_pos", "csr_indices", "csr_eids",
     "csc_row_pos", "csc_indices", "csc_eids",
-    "orig_id",
+    "orig_id", "logical_counts",
 )
 
 
@@ -564,7 +573,12 @@ def gb_array_specs(n_vertices: int, n_edges: int) -> Dict[str, Any]:
     """jax.ShapeDtypeStruct tree of the graph-binding arrays for a shape."""
     specs = {}
     for key in GB_ARRAY_KEYS:
-        n = n_vertices if key == "orig_id" else n_edges
+        if key == "logical_counts":
+            n = 2
+        elif key == "orig_id":
+            n = n_vertices
+        else:
+            n = n_edges
         specs[key] = jax.ShapeDtypeStruct((n,), jnp.int32)
     return specs
 
@@ -620,6 +634,11 @@ def _graph_bindings(
         # lane-id -> original vertex id (identity unless hub-relabeled)
         "orig_id": jnp.asarray(
             new2old if new2old is not None else np.arange(g.n_vertices, dtype=np.int32)
+        ),
+        # unpadded counts behind size(): traced so in-bucket graph updates
+        # (and padding itself) never change the executable
+        "logical_counts": jnp.asarray(
+            [g.n_vertices_logical, g.n_edges_logical], dtype=np.int32
         ),
     }
     return gb

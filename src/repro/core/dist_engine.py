@@ -374,6 +374,13 @@ class DistEngine(Engine):
             k.writes_weight for k in module.kernels.values()
         )
 
+    def refresh_graph(self, graph: Optional[GraphData] = None):
+        super().refresh_graph(graph)
+        # superstep closures captured the partitioned (sharded) graph:
+        # re-partition lazily on the next distributable launch
+        self._dist_graph = None
+        self._dist_lowered.clear()
+
     # -- lazy partition -----------------------------------------------------
     def _partitioned(self) -> DistGraph:
         if self._dist_graph is None:

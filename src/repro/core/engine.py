@@ -100,6 +100,9 @@ class EngineResult:
     properties: Dict[str, np.ndarray]
     host_env: Dict[str, Any]
     stats: EngineStats
+    # graph version the query was answered against (streaming sessions pin
+    # every admitted query to one version; 0 = static/unversioned binding)
+    version: int = 0
 
 
 @dataclass
@@ -153,6 +156,10 @@ class Engine:
         # Library-backed engines share the library's registry, so a rebind
         # of the same accelerator starts warm.
         self._warm_keys = library.warm_keys if library is not None else set()
+
+        # the graph as handed in (original vertex ids) — refresh_graph
+        # re-derives every binding from it after an in-place mutation
+        self.source_graph = graph
 
         # ---- hub cache: degree relabeling (paper Fig. 7(b)) ----
         if self.target.cache:
@@ -213,6 +220,46 @@ class Engine:
         self.host_env = {}
         for s in module.scalars.values():
             self.host_env[s.name] = self._eval_host(s.init) if s.init is not None else 0
+
+    def refresh_graph(self, graph: Optional[GraphData] = None):
+        """Re-derive every graph-dependent binding after an in-place update.
+
+        The streaming path mutates ``GraphData`` arrays in place
+        (:meth:`GraphData.apply_updates`), which invalidates the hub
+        relabeling, the burst processing order and every CSR/CSC binding
+        this engine captured at construction. Because the physical shape is
+        unchanged (same bucket), library-backed engines keep their AOT
+        executables — graph arrays are traced arguments there, so the
+        refresh costs no recompilation (``compile_time_s`` stays 0). Plain
+        engines close graph constants into their jits and must re-lower;
+        their first-touch timing keys are reset so the recompile is
+        reported honestly.
+        """
+        graph = graph if graph is not None else self.source_graph
+        self.source_graph = graph
+        if self.library is not None:
+            self.library.check_graph(graph)
+        if self.target.cache:
+            self.graph, self.old2new = graph.relabel_by_degree()
+            new2old = graph.degree_rank
+        else:
+            self.graph, self.old2new = graph, None
+            new2old = None
+        self.gb = backend._graph_bindings(self.graph, self.module, self.target,
+                                          new2old=new2old)
+        # closures over the old gb arrays; rebuilt on demand (cheap binds
+        # over the shared library, fresh jits otherwise)
+        self._lowered.clear()
+        self._subset_cache.clear()
+        self._batched.clear()
+        for attr in ("_build_batch", "_deg_np"):
+            if hasattr(self, attr):
+                delattr(self, attr)
+        if self.library is None:
+            # non-library jits captured graph constants: the rebuilt ones
+            # recompile, so nothing is warm anymore
+            self._warm_keys.clear()
+        self.reset()
 
     # ------------------------------------------------------------------
     # vertex id translation at the host/device boundary
@@ -638,9 +685,11 @@ class Engine:
         name = obj.name if isinstance(obj, fir.Ident) else None
         g = self.module.graph
         if e.method == "size":
+            # logical counts: padding (isolated vertices + self-loops) and
+            # free update slots are invisible to size()-normalized math
             if name == g.edgeset_name:
-                return self.graph.n_edges
-            return self.graph.n_vertices
+                return self.graph.n_edges_logical
+            return self.graph.n_vertices_logical
         if e.method in ("init", "process"):
             fn = e.args[0]
             if not isinstance(fn, fir.Ident):

@@ -274,6 +274,59 @@ class Module:
 
 
 # ---------------------------------------------------------------------------
+# incremental-recomputation metadata (streaming path)
+# ---------------------------------------------------------------------------
+# Derived lazily by repro.core.passes.analyze_incremental and consumed by
+# repro.streaming — deliberately NOT part of Module.describe(), so the
+# canonical serialization (and with it program fingerprints, cache
+# identities and saved artifacts) is unchanged by this analysis.
+
+
+@dataclass(frozen=True)
+class IncrementalTemplate:
+    """A recognized monotone-convergence shape with a repair recipe.
+
+    ``kind`` selects the host-side repair driver in
+    :mod:`repro.streaming.incremental`:
+
+    * ``unit_distance`` — level/hop propagation guarded on a host round
+      scalar (BFS family): ``dist + 1`` relaxations.
+    * ``weighted_distance`` — active-mask guarded ``dist + weight``
+      relaxations (SSSP family).
+    * ``label`` — symmetric min-label propagation (connected components).
+    """
+
+    kind: str  # 'unit_distance' | 'weighted_distance' | 'label'
+    dist_prop: str  # the converged result property (levels/distances/labels)
+    tuple_prop: Optional[str] = None  # tentative-min buffer (distance kinds)
+    mirror_props: Tuple[str, ...] = ()  # equal to dist_prop at the fixpoint
+    unreached: Optional[int] = None  # sentinel literal for unreached vertices
+    round_scalar: Optional[str] = None  # host scalar = max(level) + 1 at exit
+
+
+@dataclass(frozen=True)
+class IncrementalInfo:
+    """Monotonicity verdict for a module (streaming re-convergence).
+
+    ``monotone`` is true when every scattered vertex write (DST / NEIGHBOR
+    / OTHER index pattern) carries a ``min=`` / ``max=`` reduction —
+    additional edges can then only tighten the fixpoint, so re-convergence
+    may be seeded from the delta endpoints alone. ``template`` is the
+    matched repair recipe, or None when the program is monotone but not of
+    a recognized shape (repair falls back to full recompute either way).
+    """
+
+    monotone: bool
+    reduce_ops: Tuple[str, ...] = ()
+    reasons: Tuple[str, ...] = ()
+    template: Optional[IncrementalTemplate] = None
+
+    @property
+    def incremental_ok(self) -> bool:
+        return self.monotone and self.template is not None
+
+
+# ---------------------------------------------------------------------------
 # canonical serialization / fingerprinting
 # ---------------------------------------------------------------------------
 

@@ -836,3 +836,246 @@ PASSES: Dict[str, Callable[[PassContext], None]] = {
     "direction": pass_direction,
     "fuse": pass_fuse,
 }
+
+
+# ---------------------------------------------------------------------------
+# incremental-recomputation analysis (streaming path; not in PASSES)
+# ---------------------------------------------------------------------------
+# Unlike the rewriting passes above, this analysis never mutates the module
+# and never contributes to its canonical serialization — program
+# fingerprints, cache identities and saved artifacts are untouched. It is
+# computed lazily by repro.streaming when the first delta arrives.
+
+
+def _iter_all_stmts(stmts: List[fir.Stmt]):
+    """Yield every statement, descending into nested bodies."""
+    for st in stmts:
+        yield st
+        if isinstance(st, fir.If):
+            yield from _iter_all_stmts(st.then_body)
+            yield from _iter_all_stmts(st.else_body)
+        elif isinstance(st, (fir.While, fir.For)):
+            yield from _iter_all_stmts(st.body)
+
+
+def _prop_index(module: mir.Module, e) -> Optional[Tuple[str, fir.Expr]]:
+    """(property name, index expr) when ``e`` is ``P[i]`` for a property."""
+    if (isinstance(e, fir.Index) and isinstance(e.base, fir.Ident)
+            and e.base.name in module.properties):
+        return e.base.name, e.index
+    return None
+
+
+def _ident_name(e) -> Optional[str]:
+    return e.name if isinstance(e, fir.Ident) else None
+
+
+def _const_int(module: mir.Module, e) -> Optional[int]:
+    """Fold an expression to a compile-time int (literals, const scalars)."""
+    if isinstance(e, fir.IntLit):
+        return int(e.value)
+    if isinstance(e, fir.UnaryOp) and e.op == "-":
+        v = _const_int(module, e.operand)
+        return None if v is None else -v
+    if isinstance(e, fir.Ident) and e.name in module.scalars:
+        init = module.scalars[e.name].init
+        return None if init is None else _const_int(module, init)
+    return None
+
+
+def _vertex_init_literal(module: mir.Module,
+                         vertex_kernels: List[mir.Kernel],
+                         prop: str) -> Optional[int]:
+    """The constant a vertex kernel initializes ``prop[v]`` to, if any."""
+    for k in vertex_kernels:
+        for st in _iter_all_stmts(k.func.body):
+            if not isinstance(st, fir.Assign):
+                continue
+            tgt = _prop_index(module, st.target)
+            if tgt and tgt[0] == prop and _ident_name(tgt[1]) == k.vertex_param:
+                v = _const_int(module, st.value)
+                if v is not None:
+                    return v
+    return None
+
+
+def _copy_source(module: mir.Module, vertex_kernels: List[mir.Kernel],
+                 dst_prop: str) -> Optional[str]:
+    """Find M such that some vertex kernel runs ``dst_prop[v] = M[v]``."""
+    for k in vertex_kernels:
+        for st in _iter_all_stmts(k.func.body):
+            if not isinstance(st, fir.Assign):
+                continue
+            tgt = _prop_index(module, st.target)
+            if not (tgt and tgt[0] == dst_prop
+                    and _ident_name(tgt[1]) == k.vertex_param):
+                continue
+            val = _prop_index(module, st.value)
+            if val and _ident_name(val[1]) == k.vertex_param:
+                return val[0]
+    return None
+
+
+def _has_vertex_copy(module: mir.Module, vertex_kernels: List[mir.Kernel],
+                     dst_prop: str, src_prop: str) -> bool:
+    return _copy_source(module, vertex_kernels, dst_prop) == src_prop or any(
+        _copy_source(module, [k], dst_prop) == src_prop for k in vertex_kernels
+    )
+
+
+def _match_label(module: mir.Module, edge_kernels: List[mir.Kernel],
+                 vertex_kernels: List[mir.Kernel]) -> Optional[mir.IncrementalTemplate]:
+    """Connected-components shape: symmetric unguarded min-label exchange."""
+    for k in edge_kernels:
+        reduces = [s for s in _iter_all_stmts(k.func.body)
+                   if isinstance(s, fir.ReduceAssign) and s.op == "min"]
+        if len(reduces) != 2:
+            continue
+        pairs = []
+        for s in reduces:
+            tgt = _prop_index(module, s.target)
+            val = _prop_index(module, s.value)
+            if tgt is None or val is None:
+                break
+            pairs.append((tgt[0], _ident_name(tgt[1]), val[0], _ident_name(val[1])))
+        if len(pairs) != 2:
+            continue
+        (p1, t1, q1, v1), (p2, t2, q2, v2) = pairs
+        symmetric = (
+            p1 == p2 and q1 == q2
+            and {(t1, v1), (t2, v2)}
+            == {(k.dst_param, k.src_param), (k.src_param, k.dst_param)}
+        )
+        if not symmetric:
+            continue
+        nxt, label = p1, q1  # next[dst] min= label[src] (and mirrored)
+        # the apply step must fold improvements back (label := next) and the
+        # labels must start as vertex ids — both are what make min-flood
+        # repair converge to the same fixpoint as a from-scratch run
+        if not _has_vertex_copy(module, vertex_kernels, label, nxt):
+            continue
+        ids_init = any(
+            isinstance(st, fir.Assign)
+            and (tgt := _prop_index(module, st.target)) is not None
+            and tgt[0] == label and _ident_name(tgt[1]) == k2.vertex_param
+            and _ident_name(st.value) == k2.vertex_param
+            for k2 in vertex_kernels
+            for st in _iter_all_stmts(k2.func.body)
+        )
+        if not ids_init:
+            continue
+        return mir.IncrementalTemplate(
+            kind="label", dist_prop=label, mirror_props=(nxt,)
+        )
+    return None
+
+
+def _match_distance(module: mir.Module, edge_kernels: List[mir.Kernel],
+                    vertex_kernels: List[mir.Kernel]) -> Optional[mir.IncrementalTemplate]:
+    """BFS / SSSP shapes: guarded ``T[dst] min= dist-ish + step`` relaxation."""
+    for k in edge_kernels:
+        for st in _iter_all_stmts(k.func.body):
+            if not isinstance(st, fir.If):
+                continue
+            reduces = [s for s in st.then_body
+                       if isinstance(s, fir.ReduceAssign) and s.op == "min"]
+            if len(reduces) != 1:
+                continue
+            r = reduces[0]
+            tgt = _prop_index(module, r.target)
+            if not (tgt and _ident_name(tgt[1]) == k.dst_param):
+                continue
+            tuple_prop = tgt[0]
+            val, cond = r.value, st.cond
+            if not (isinstance(val, fir.BinOp) and val.op == "+"):
+                continue
+            if not (isinstance(cond, fir.BinOp) and cond.op == "=="):
+                continue
+            guard = _prop_index(module, cond.lhs)
+            if not (guard and _ident_name(guard[1]) == k.src_param):
+                continue
+            # BFS family: `if dist[src] == level: T[dst] min= level + 1`
+            rs = _ident_name(cond.rhs)
+            if (rs is not None and rs in module.scalars
+                    and _ident_name(val.lhs) == rs
+                    and isinstance(val.rhs, fir.IntLit) and val.rhs.value == 1):
+                dist = guard[0]
+                sentinel = _vertex_init_literal(module, vertex_kernels, dist)
+                mirror = _copy_source(module, vertex_kernels, dist)
+                if sentinel is not None:
+                    return mir.IncrementalTemplate(
+                        kind="unit_distance", dist_prop=dist,
+                        tuple_prop=tuple_prop,
+                        mirror_props=(mirror,) if mirror else (),
+                        unreached=sentinel, round_scalar=rs,
+                    )
+            # SSSP family: `if active[src] == 1: T[dst] min= D[src] + w`
+            if (isinstance(cond.rhs, fir.IntLit) and cond.rhs.value == 1
+                    and k.weight_param is not None
+                    and _ident_name(val.rhs) == k.weight_param):
+                dsrc = _prop_index(module, val.lhs)
+                if not (dsrc and _ident_name(dsrc[1]) == k.src_param):
+                    continue
+                dist = dsrc[0]
+                sentinel = _vertex_init_literal(module, vertex_kernels, dist)
+                if sentinel is not None and _has_vertex_copy(
+                        module, vertex_kernels, dist, tuple_prop):
+                    return mir.IncrementalTemplate(
+                        kind="weighted_distance", dist_prop=dist,
+                        tuple_prop=tuple_prop, unreached=sentinel,
+                    )
+    return None
+
+
+def analyze_incremental(module: mir.Module) -> mir.IncrementalInfo:
+    """Monotonicity verdict + repair template for streaming re-convergence.
+
+    A module is *monotone* when every per-edge write to a vertex property
+    (SRC/DST/NEIGHBOR/OTHER patterns in edge kernels, scattered patterns in
+    vertex kernels) is a ``min=``/``max=`` reduction — const-index
+    accumulator cells (host control counters) and sequential vertex-apply
+    writes are exempt. For such programs, adding edges can only tighten
+    the fixpoint, so re-convergence may be seeded from the delta endpoints
+    alone. Non-monotone programs (PageRank's ``+=`` mass flow, weight
+    mutation, plain-assign scatters) get ``monotone=False`` and the
+    streaming layer transparently falls back to full recompute.
+    """
+    scattered = (mir.IndexPattern.DST, mir.IndexPattern.NEIGHBOR,
+                 mir.IndexPattern.OTHER)
+    ops: Set[str] = set()
+    reasons: List[str] = []
+    monotone = True
+    base = [k for k in module.kernels.values()
+            if isinstance(k, mir.Kernel) and k.kind is not mir.KernelKind.HOST]
+    for k in base:
+        if k.writes_weight:
+            monotone = False
+            reasons.append(f"{k.name}: mutates edge weights")
+        for w in k.writes:
+            if w.pattern is mir.IndexPattern.CONST:
+                continue  # accumulator cell: host control flow, not state
+            per_edge = (w.pattern in scattered
+                        or (k.kind is mir.KernelKind.EDGE
+                            and w.pattern is mir.IndexPattern.SRC))
+            if not per_edge:
+                continue  # sequential vertex-apply write
+            if w.reduce_op in ("min", "max"):
+                ops.add(w.reduce_op)
+            else:
+                monotone = False
+                reasons.append(
+                    f"{k.name}: per-edge '{w.reduce_op or '='}' write to {w.prop}"
+                )
+    if not ops:
+        monotone = False
+        reasons.append("no min=/max= reduction to re-converge through")
+    template = None
+    if monotone:
+        edge_kernels = [k for k in base if k.kind is mir.KernelKind.EDGE]
+        vertex_kernels = [k for k in base if k.kind is mir.KernelKind.VERTEX]
+        template = (_match_label(module, edge_kernels, vertex_kernels)
+                    or _match_distance(module, edge_kernels, vertex_kernels))
+    return mir.IncrementalInfo(
+        monotone=monotone, reduce_ops=tuple(sorted(ops)),
+        reasons=tuple(reasons), template=template,
+    )

@@ -224,7 +224,8 @@ class Program:
     # -- lowering (Accelerator artifacts) ------------------------------------
     def lower(self, target: "Optional[Target]" = None,
               shape: "Optional[GraphShape]" = None, *,
-              graph: "Optional[GraphData]" = None) -> "Accelerator":
+              graph: "Optional[GraphData]" = None,
+              bucket: bool = False) -> "Accelerator":
         """AOT-lower this program for a (target, shape bucket).
 
         The returned :class:`~repro.core.accelerator.Accelerator` has every
@@ -235,6 +236,14 @@ class Program:
         weighted=...)`` or ``graph=`` to take the bucket from a concrete
         graph. ``target`` defaults to the Target implied by this program's
         CompileOptions (legacy substrate kwargs included).
+
+        ``bucket=True`` (with ``graph=``) rounds the graph's logical counts
+        up to a shared geometric bucket (:meth:`GraphShape.bucket_for`)
+        instead of taking its exact physical shape — graphs of similar size
+        then reuse one lowering, and the headroom doubles as streaming
+        update slack. The caller binds ``graph.pad_to(shape.n_vertices,
+        shape.n_edges)``, not the unpadded graph (``bind`` checks shapes
+        exactly).
         """
         from .accelerator import Accelerator, GraphShape
         from .target import Target
@@ -245,7 +254,13 @@ class Program:
                     "Program.lower needs a shape bucket: pass "
                     "shape=GraphShape(...) or graph=<GraphData>"
                 )
-            shape = GraphShape.of(graph)
+            if bucket:
+                shape = GraphShape.bucket_for(
+                    graph.n_vertices_logical, graph.n_edges_logical,
+                    weighted=graph.weighted,
+                )
+            else:
+                shape = GraphShape.of(graph)
         if target is None:
             target = Target.from_options(self.options)
         return Accelerator(self, target, shape)

@@ -232,6 +232,30 @@ class Session:
             return bs.run_many(sets)
         return [self.run(**p) for p in sets]
 
+    def refresh_graph(self, graph: Optional[GraphData] = None) -> None:
+        """Rebind after an in-place graph mutation (streaming update path).
+
+        Re-derives the backend engine's graph-dependent bindings (hub
+        relabeling, processing order, CSR/CSC device arrays) against the
+        updated — same-shape — graph. Only callable on backends exposing an
+        ``engine``. The caller must guarantee no query is in flight (the
+        :class:`repro.streaming.StreamingSession` write gate does);
+        this method still takes the session lock as a second line of
+        defense against torn reads.
+        """
+        graph = graph if graph is not None else self.graph
+        engine = getattr(self.backend, "engine", None)
+        if engine is None:
+            raise SessionError(
+                f"backend {self.backend_name!r} does not expose an engine; "
+                "cannot refresh its graph binding in place"
+            )
+        with self._lock:
+            self.graph = graph
+            engine.refresh_graph(graph)
+        if self._batch_session is not None:
+            self._batch_session.refresh_graph(graph)
+
     def _ensure_batch_session(self) -> Optional["BatchSession"]:
         """Lazily build the batched twin of this session (None if the
         backend cannot host one; the failure is memoized so engine-less
@@ -343,6 +367,14 @@ class BatchSession:
                 self.runs += 1
                 self.queries += len(chunk)
         return out
+
+    def refresh_graph(self, graph: Optional[GraphData] = None) -> None:
+        """Rebind after an in-place graph mutation (see Session.refresh_graph)."""
+        graph = graph if graph is not None else self.graph
+        with self._lock:
+            self.graph = graph
+            self.engine.engine.refresh_graph(graph)  # inner Engine
+            self.engine.refresh_graph()  # BatchEngine re-points its snapshot
 
     def __enter__(self) -> "BatchSession":
         return self
@@ -490,6 +522,24 @@ class SessionPool:
         if self._batcher is not None:
             return self._batcher.submit(params)
         return self._executor.submit(self._run_one, params)
+
+    def refresh_graph(self, graph: Optional[GraphData] = None) -> None:
+        """Rebind every worker (and the shared BatchSession) after an
+        in-place graph mutation. The pool must be quiescent — no query in
+        flight and the dynamic batcher drained; the streaming layer's
+        write gate guarantees this, and callers driving the pool directly
+        must arrange the same.
+        """
+        if self._closed:
+            raise SessionError("SessionPool is closed")
+        graph = graph if graph is not None else self.graph
+        self.graph = graph
+        if self._batcher is not None:
+            self._batcher.drain()
+        for s in self._sessions:
+            s.refresh_graph(graph)
+        if self._batch_session is not None:
+            self._batch_session.refresh_graph(graph)
 
     def run_batch(self, param_sets: Sequence[Dict[str, Any]],
                   batched: Optional[bool] = None) -> List[EngineResult]:

@@ -1,4 +1,11 @@
-from .storage import GraphData, PartitionedEdges
+from .storage import GraphData, GraphDelta, GraphUpdateError, PartitionedEdges
 from . import generators, datasets
 
-__all__ = ["GraphData", "PartitionedEdges", "generators", "datasets"]
+__all__ = [
+    "GraphData",
+    "GraphDelta",
+    "GraphUpdateError",
+    "PartitionedEdges",
+    "generators",
+    "datasets",
+]

@@ -17,7 +17,7 @@ This is the memory layout layer of the back-end framework (paper Fig. 4):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import cached_property
 from typing import Optional, Tuple
 
@@ -47,14 +47,92 @@ def _indptr_from_degrees(degrees: np.ndarray, n_edges: int) -> np.ndarray:
     return indptr.astype(np.int32)
 
 
+class GraphUpdateError(RuntimeError):
+    """A :class:`GraphDelta` cannot be applied inside the current bucket."""
+
+
+def _edge_pairs(edges) -> np.ndarray:
+    """Coerce an edge collection to an int32 [K, 2] (src, dst) array."""
+    if edges is None:
+        return np.empty((0, 2), dtype=np.int32)
+    arr = np.asarray(edges, dtype=np.int32)
+    if arr.size == 0:
+        return arr.reshape(0, 2)
+    if arr.ndim != 2 or arr.shape[1] != 2:
+        raise ValueError(f"edges must be [K, 2] (src, dst) pairs, got shape {arr.shape}")
+    return arr
+
+
+@dataclass(frozen=True)
+class GraphDelta:
+    """A batch of edge mutations applied atomically by ``apply_updates``.
+
+    ``added_edges`` / ``removed_edges`` are [K, 2] (src, dst) pairs (any
+    array-like; coerced to int32). ``added_weights`` optionally carries one
+    weight per added edge; weighted graphs default missing weights to 1.
+    """
+
+    added_edges: Optional[np.ndarray] = None  # int32 [K, 2]
+    removed_edges: Optional[np.ndarray] = None  # int32 [K, 2]
+    added_weights: Optional[np.ndarray] = None  # [K] or None
+
+    def __post_init__(self):
+        object.__setattr__(self, "added_edges", _edge_pairs(self.added_edges))
+        object.__setattr__(self, "removed_edges", _edge_pairs(self.removed_edges))
+        if self.added_weights is not None:
+            w = np.asarray(self.added_weights)
+            if w.shape != (len(self.added_edges),):
+                raise ValueError(
+                    f"added_weights shape {w.shape} does not match "
+                    f"{len(self.added_edges)} added edges"
+                )
+            object.__setattr__(self, "added_weights", w)
+
+    @property
+    def n_added(self) -> int:
+        return int(self.added_edges.shape[0])
+
+    @property
+    def n_removed(self) -> int:
+        return int(self.removed_edges.shape[0])
+
+    @property
+    def additions_only(self) -> bool:
+        return self.n_removed == 0
+
+    def endpoints(self) -> np.ndarray:
+        """Unique vertex ids touched by the delta (incremental seeds)."""
+        return np.unique(
+            np.concatenate([self.added_edges.ravel(), self.removed_edges.ravel()])
+        )
+
+
 @dataclass
 class GraphData:
-    """An immutable graph with precomputed access-optimization metadata."""
+    """A graph with precomputed access-optimization metadata.
+
+    Graphs are immutable for every static workflow; the streaming path
+    (:mod:`repro.streaming`) mutates one **in place** through
+    :meth:`apply_updates`, which recycles ``pad_to`` padding slack as an
+    edge free-list so the physical shape — and therefore the
+    :class:`~repro.core.accelerator.GraphShape` bucket — never changes.
+
+    ``n_vertices`` / ``n_edges`` are the *physical* (possibly padded)
+    counts that size device buffers; ``n_vertices_logical`` /
+    ``n_edges_logical`` are the real graph's counts. Globally-normalized
+    algorithms (``vertices.size()`` — PageRank's 1/|V| teleport mass) read
+    the logical counts, so padded and unpadded runs agree.
+    """
 
     n_vertices: int
     src: np.ndarray  # int32 [E]
     dst: np.ndarray  # int32 [E]
     weights: Optional[np.ndarray] = None  # float32/int32 [E] or None
+    n_vertices_logical: Optional[int] = None  # real |V| (defaults to physical)
+    n_edges_logical: Optional[int] = None  # real |E| (defaults to physical)
+    # bumped by every in-place mutation (apply_updates / compact) so callers
+    # holding a reference can detect staleness without hashing arrays
+    version: int = field(default=0, init=False, repr=False, compare=False)
 
     def __post_init__(self):
         self.src = np.asarray(self.src, dtype=np.int32)
@@ -63,6 +141,19 @@ class GraphData:
             self.weights = np.asarray(self.weights)
         if self.src.shape != self.dst.shape:
             raise ValueError("src/dst shape mismatch")
+        if self.n_vertices_logical is None:
+            self.n_vertices_logical = self.n_vertices
+        if self.n_edges_logical is None:
+            self.n_edges_logical = self.n_edges
+        if not 0 <= self.n_vertices_logical <= self.n_vertices:
+            raise ValueError(
+                f"n_vertices_logical={self.n_vertices_logical} outside "
+                f"[0, {self.n_vertices}]"
+            )
+        if not 0 <= self.n_edges_logical <= self.n_edges:
+            raise ValueError(
+                f"n_edges_logical={self.n_edges_logical} outside [0, {self.n_edges}]"
+            )
 
     # -- basic properties ---------------------------------------------------
     @property
@@ -148,6 +239,8 @@ class GraphData:
             old2new[self.src],
             old2new[self.dst],
             None if self.weights is None else self.weights.copy(),
+            n_vertices_logical=self.n_vertices_logical,
+            n_edges_logical=self.n_edges_logical,
         )
         return g, old2new
 
@@ -179,7 +272,14 @@ class GraphData:
     def with_unit_weights(self) -> "GraphData":
         if self.weighted:
             return self
-        return GraphData(self.n_vertices, self.src, self.dst, np.ones(self.n_edges, np.float32))
+        return GraphData(
+            self.n_vertices,
+            self.src,
+            self.dst,
+            np.ones(self.n_edges, np.float32),
+            n_vertices_logical=self.n_vertices_logical,
+            n_edges_logical=self.n_edges_logical,
+        )
 
     def pad_to(self, n_vertices: int, n_edges: int) -> "GraphData":
         """Pad to a shape bucket: isolated vertices + padding self-loops.
@@ -190,15 +290,13 @@ class GraphData:
         edges are self-loops on the LAST padding vertex, so no real vertex's
         degree or neighborhood changes.
 
-        The result IS a different graph, though: algorithms whose semantics
-        depend on global aggregates — ``vertices.size()`` normalization
-        (PageRank's 1/|V| teleport mass, PPR), whole-vertexset reductions —
-        observe the padded |V|/|E| and their per-vertex numbers shift
-        accordingly. Locally-defined results (BFS levels, SSSP distances,
-        WCC labels, k-core, degrees) are unchanged on the real id range.
-        Always compare padded runs against padded runs; the equivalence
-        guarantee of the Accelerator path is "same padded graph, same
-        results", never "padded equals unpadded".
+        The padded graph carries the original counts as
+        ``n_vertices_logical`` / ``n_edges_logical``, and ``size()`` (host
+        and kernel) reads the logical counts — so globally-normalized
+        algorithms (PageRank's 1/|V| teleport mass, PPR) agree between
+        padded and unpadded runs. Padding self-loops double as the edge
+        free-list that :meth:`apply_updates` consumes, which is why a
+        padding edge must never touch a real vertex.
         """
         pad_v = n_vertices - self.n_vertices
         pad_e = n_edges - self.n_edges
@@ -224,7 +322,139 @@ class GraphData:
                 self.weights,
                 np.ones(pad_e, dtype=self.weights.dtype),
             ])
-        return GraphData(n_vertices, src, dst, w)
+        return GraphData(
+            n_vertices,
+            src,
+            dst,
+            w,
+            n_vertices_logical=self.n_vertices_logical,
+            n_edges_logical=self.n_edges_logical,
+        )
+
+    # -- streaming updates (repro.streaming) ----------------------------------
+    def _invalidate_caches(self) -> None:
+        """Drop every cached derived structure after an in-place mutation."""
+        for name in ("out_degree", "in_degree", "csr", "csc", "row_ids",
+                     "dst_sort_perm", "degree_rank"):
+            self.__dict__.pop(name, None)
+
+    def _free_slot_mask(self) -> np.ndarray:
+        """Free edge slots: padding self-loops on non-logical vertices."""
+        return (self.src == self.dst) & (self.src >= self.n_vertices_logical)
+
+    def apply_updates(self, delta: GraphDelta, *, compact: bool = False) -> "GraphData":
+        """Apply an edge delta IN PLACE, reusing padding slack as slots.
+
+        Removed edges are tombstoned — rewritten into padding self-loops on
+        the last (padding) vertex, returning their slot to the free list.
+        Added edges consume free slots. The physical (|V|, |E|) — and with
+        it the :class:`~repro.core.accelerator.GraphShape` bucket — never
+        changes, so an update against a bound
+        :class:`~repro.core.accelerator.Accelerator` is a shape-check-only
+        rebind: no re-lowering, no recompilation.
+
+        The mutation is all-or-nothing: feasibility (removals present,
+        enough free slots, endpoints in the logical range) is checked
+        before any array is touched, and a :class:`GraphUpdateError` means
+        the graph is unchanged — re-pad into a larger bucket (see
+        ``GraphShape.bucket_for``) and retry. Expects the ``pad_to``
+        padding layout (call on the original graph, never a relabeled one).
+        """
+        add, rem = delta.added_edges, delta.removed_edges
+        lv, le = self.n_vertices_logical, self.n_edges_logical
+        for kind, e in (("added", add), ("removed", rem)):
+            if e.size and (int(e.min()) < 0 or int(e.max()) >= lv):
+                raise GraphUpdateError(
+                    f"{kind} edges reference vertex ids outside the logical "
+                    f"range [0, {lv}); growing the vertex set needs a re-pad "
+                    f"into a larger bucket"
+                )
+        free_mask = self._free_slot_mask()
+        n_free = int(free_mask.sum())
+        if n_free != self.n_edges - le:
+            raise GraphUpdateError(
+                f"padding-slot invariant violated: expected {self.n_edges - le} "
+                f"free self-loop slots, found {n_free} (apply_updates needs "
+                f"the pad_to layout of the original, unrelabeled graph)"
+            )
+        # resolve removals to physical slots BEFORE mutating anything, so a
+        # failed lookup or overflow leaves the graph untouched
+        tomb = np.empty(0, dtype=np.int64)
+        if len(rem):
+            keys = self.src.astype(np.int64) * self.n_vertices + self.dst
+            keys[free_mask] = -1  # free slots are not removable edges
+            order = np.argsort(keys, kind="stable")
+            skeys = keys[order]
+            rkeys = rem[:, 0].astype(np.int64) * self.n_vertices + rem[:, 1]
+            uniq, counts = np.unique(rkeys, return_counts=True)
+            picks = []
+            for k, c in zip(uniq, counts):
+                lo = int(np.searchsorted(skeys, k, "left"))
+                hi = int(np.searchsorted(skeys, k, "right"))
+                if hi - lo < int(c):
+                    u, v = divmod(int(k), self.n_vertices)
+                    raise GraphUpdateError(
+                        f"cannot remove edge ({u}, {v}): {int(c)} removal(s) "
+                        f"requested but only {hi - lo} present"
+                    )
+                picks.append(order[lo:lo + int(c)])
+            tomb = np.concatenate(picks)
+            if self.n_vertices == lv:
+                raise GraphUpdateError(
+                    "removals need at least one padding vertex to carry the "
+                    "tombstone self-loops; pad_to a larger bucket first"
+                )
+        if n_free + len(tomb) < len(add):
+            need_e = le - len(rem) + len(add)
+            raise GraphUpdateError(
+                f"delta needs {len(add)} free edge slots but only "
+                f"{n_free + len(tomb)} are available in this bucket; re-pad "
+                f"to GraphShape.bucket_for({lv}, {need_e}) and re-bind"
+            )
+        pad_vertex = self.n_vertices - 1
+        if len(tomb):
+            self.src[tomb] = pad_vertex
+            self.dst[tomb] = pad_vertex
+            if self.weights is not None:
+                self.weights[tomb] = 1
+        if len(add):
+            free = np.flatnonzero(self._free_slot_mask())
+            slots = free[: len(add)]
+            self.src[slots] = add[:, 0]
+            self.dst[slots] = add[:, 1]
+            if self.weights is not None:
+                if delta.added_weights is not None:
+                    self.weights[slots] = np.asarray(
+                        delta.added_weights, dtype=self.weights.dtype
+                    )
+                else:
+                    self.weights[slots] = 1
+        self.n_edges_logical = le - len(rem) + len(add)
+        self.version += 1
+        self._invalidate_caches()
+        if compact:
+            self.compact()
+        return self
+
+    def compact(self) -> "GraphData":
+        """Stable-partition real edges ahead of free slots, in place.
+
+        Semantically a no-op (the edge multiset is unchanged), but after
+        many tombstone/append cycles it restores the "real edges first,
+        padding last" layout ``pad_to`` produced, keeping processing order
+        close to the freshly-padded graph's.
+        """
+        free_mask = self._free_slot_mask()
+        if not free_mask.any():
+            return self
+        order = np.argsort(free_mask, kind="stable")  # real edges first
+        self.src = self.src[order]
+        self.dst = self.dst[order]
+        if self.weights is not None:
+            self.weights = self.weights[order]
+        self.version += 1
+        self._invalidate_caches()
+        return self
 
 
 @dataclass

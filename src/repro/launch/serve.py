@@ -14,6 +14,12 @@ batches of up to N and answered by one vectorized BatchSession execution
 (bit-identical results, far fewer launches); the printed stats then include
 batch occupancy. Per-query latency percentiles are reported either way.
 
+``--updates N`` switches the graph path to streaming serving: N edge-addition
+deltas are interleaved through the query stream via a StreamingSession —
+in-place updates into the padding slack (no re-lowering), incremental repair
+for monotone programs — and per-version query latency plus update-apply
+latency are reported.
+
 ``--artifact-dir DIR`` turns on accelerator warm-starting: the program is
 AOT-lowered once per (program, target, shape bucket) into a saved
 :class:`~repro.core.accelerator.Accelerator` artifact under DIR, and every
@@ -187,6 +193,100 @@ def serve_graph(args) -> int:
     return 0
 
 
+def serve_streaming(args) -> int:
+    """``--updates N``: serve queries over a *mutating* graph.
+
+    N additions-only deltas (each ~1% of |E| random edges) are interleaved
+    evenly through the query stream via a
+    :class:`~repro.streaming.StreamingSession`. Every update is an in-place
+    ``apply_updates`` into the graph's padding slack — a shape-check-only
+    rebind, no re-lowering — and repeated queries are answered by
+    incremental repair when the program is monotone (bfs/sssp) or a full
+    re-run otherwise (pagerank). Reports per-version query latency and
+    update-apply latency so the streaming cost model is observable.
+    """
+    from ..algorithms import sources
+    from ..core.accelerator import GraphShape
+    from ..core.program import compile_program
+    from ..graph import generators
+    from ..graph.storage import GraphDelta
+    from ..streaming import StreamingSession
+
+    src = {
+        "bfs": sources.BFS_ECP,
+        "pagerank": sources.PAGERANK,
+        "sssp": sources.SSSP,
+    }[args.graph]
+    weighted = args.graph == "sssp"
+    base = generators.power_law(
+        args.vertices, args.edges, seed=args.seed, weighted=weighted
+    )
+    shape = GraphShape.bucket_for(
+        base.n_vertices, base.n_edges, weighted=weighted
+    )
+    graph = base.pad_to(shape.n_vertices, shape.n_edges)
+    program = compile_program(src)
+    rng = np.random.default_rng(args.seed)
+    if args.graph == "pagerank":
+        queries = [{"iters": int(i)} for i in rng.integers(5, 25, args.queries)]
+    else:
+        # few distinct roots, repeated: repeats across versions are exactly
+        # the queries incremental repair accelerates
+        roots = rng.integers(0, base.n_vertices, max(4, args.queries // 4))
+        queries = [{"root": int(roots[i % len(roots)])}
+                   for i in range(args.queries)]
+
+    accelerator = None
+    if args.artifact_dir:
+        accelerator = resolve_accelerator(
+            program, graph, args.backend, args.artifact_dir
+        )
+    print(f"streaming-serving {args.queries} {args.graph} queries with "
+          f"{args.updates} interleaved updates on |V|={base.n_vertices} "
+          f"|E|={base.n_edges} (bucket {shape.n_vertices}x{shape.n_edges}, "
+          f"{args.backend} backend)")
+
+    n_add = max(1, base.n_edges // 100)  # ~1% of |E| per delta
+    stride = max(1, args.queries // (args.updates + 1))
+    lat_by_version: dict = {}
+    with StreamingSession(
+        program, graph, backend=args.backend, accelerator=accelerator,
+        pool_size=args.pool, batch=args.batch,
+    ) as ss:
+        ss.warmup(**queries[0])
+        t0 = time.perf_counter()
+        for i, q in enumerate(queries):
+            if args.updates and i and i % stride == 0 and ss.updates < args.updates:
+                lv = ss.graph.n_vertices_logical
+                edges = rng.integers(0, lv, size=(n_add, 2)).astype(np.int32)
+                w = (rng.integers(1, 64, size=n_add).astype(np.float32)
+                     if weighted else None)
+                ss.update(GraphDelta(added_edges=edges, added_weights=w))
+            t_q = time.perf_counter()
+            result = ss.run(**q)
+            lat_by_version.setdefault(result.version, []).append(
+                (time.perf_counter() - t_q) * 1e3
+            )
+        dt = time.perf_counter() - t0
+        print(f"answered {args.queries} queries across {ss.version + 1} graph "
+              f"versions in {dt:.3f}s ({args.queries / dt:.1f} qps)")
+        for version in sorted(lat_by_version):
+            lat = np.asarray(lat_by_version[version])
+            print(f"  version {version}: {len(lat)} queries, "
+                  f"p50={np.percentile(lat, 50):.1f}ms "
+                  f"max={lat.max():.1f}ms")
+        if ss.update_apply_s:
+            apply_ms = np.asarray(ss.update_apply_s) * 1e3
+            print(f"updates: {ss.updates} applied ({n_add} edges each), "
+                  f"apply p50={np.percentile(apply_ms, 50):.1f}ms "
+                  f"max={apply_ms.max():.1f}ms, rebuckets={ss.rebuckets}")
+        print(f"answer paths: {ss.cache_hits} cache hits, "
+              f"{ss.incremental_runs} incremental repairs, "
+              f"{ss.full_runs} full runs "
+              f"(monotone={ss.incremental_info.monotone})")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-0.6b")
@@ -202,6 +302,11 @@ def main(argv=None):
     ap.add_argument("--graph", choices=GRAPH_ALGOS, default=None,
                     help="serve graph queries for this algorithm instead of LM decode")
     ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--updates", type=int, default=0,
+                    help="graph path: interleave N streaming edge-addition "
+                         "deltas (~1%% of |E| each) through the query stream "
+                         "via a StreamingSession; reports per-version query "
+                         "latency and update-apply latency")
     ap.add_argument("--pool", type=int, default=2)
     ap.add_argument("--artifact-dir", default=None,
                     help="graph path: warm-start from (or populate) a saved "
@@ -215,6 +320,8 @@ def main(argv=None):
     if args.graph is not None:
         if args.batch is None:
             args.batch = 0  # graph path: dynamic batching off by default
+        if args.updates:
+            return serve_streaming(args)
         return serve_graph(args)
     if args.batch is None:
         args.batch = 4  # LM path: prompt batch size

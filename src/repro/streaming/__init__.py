@@ -1,0 +1,16 @@
+"""Streaming graph updates + incremental recomputation.
+
+``StreamingSession`` serves queries over a graph that mutates in place via
+:class:`~repro.graph.storage.GraphDelta`; monotone programs (BFS/SSSP/CC)
+repair cached results incrementally instead of recomputing from scratch.
+"""
+from ..graph.storage import GraphDelta, GraphUpdateError
+from .incremental import repair_result
+from .session import StreamingSession
+
+__all__ = [
+    "GraphDelta",
+    "GraphUpdateError",
+    "StreamingSession",
+    "repair_result",
+]
