@@ -13,7 +13,11 @@ Two modes:
   A ``streaming`` section (bfs_incremental) applies a 1% additions-only
   GraphDelta through a StreamingSession and gates incremental repair at
   >= 3x over a warm full recompute, with zero re-lowering and bit-identical
-  results.
+  results. A ``serving`` section (serve_mixed_slo) drives sustained mixed
+  BFS + PPR + SSSP traffic across two weighted tenants through one
+  ``repro.serve()`` service and gates per-tenant p99 latency against an
+  SLO ceiling with zero dropped-below-deadline admissions and one
+  lowering per program.
 
 * ``--check``: compares a freshly written ``BENCH_ci.json`` against the
   committed ``BENCH_baseline.json`` and exits non-zero when any workload's
@@ -244,6 +248,102 @@ def _time_streaming():
     }
 
 
+def _time_serving():
+    """Serving-tier SLO gate (serve_mixed_slo): sustained mixed traffic —
+    BFS roots, PPR seeds, and SSSP queries interleaved across two weighted
+    tenants — through one ``repro.serve()`` GraphService.
+
+    Warm-up traffic runs under a separate ``warmup`` tenant (cold
+    lowerings and per-batch-size trace compilation land on its histogram,
+    not the measured tenants'), then 90 deadline-carrying queries are
+    submitted for tenants ``alpha`` (weight 1) and ``beta`` (weight 2) in
+    closed-loop waves of 8 outstanding requests — bounded client
+    concurrency keeps the measured latency about service time plus
+    scheduling, not backlog wait, while per-program runs of same-group
+    requests still exercise batch formation. Gates, all
+    machine-independent invariants except
+    the deliberately generous absolute SLO: per-tenant p99 latency must
+    stay under ``slo_p99_ms``, zero queries dropped below their deadline
+    (no ``DeadlineExceeded``/``Overloaded`` rejections, no misses, no
+    errors), every admission completed, and exactly one lowering per
+    program (the registry served all repeat traffic warm)."""
+    import numpy as np
+
+    import repro
+    from repro.core.program import clear_program_cache
+    from repro.graph import generators
+
+    clear_program_cache()
+    g = generators.power_law(2000, 16000, seed=4, weighted=True)
+    rng = np.random.default_rng(11)
+    max_batch = 2
+    programs = {
+        "bfs": lambda: {"root": int(rng.integers(0, g.n_vertices))},
+        "ppr": lambda: {"source": int(rng.integers(0, g.n_vertices)),
+                        "max_iters": 8},
+        "sssp": lambda: {"root": int(rng.integers(0, g.n_vertices))},
+    }
+    per_burst = 15  # x 3 programs x 2 tenants = 90 measured queries
+    deadline_s = 15.0
+    # ~4x the locally measured tail (bfs waves tail at ~2s: K=2 bit-packed
+    # multi-source batches process full edge streams per level, ~0.45s per
+    # batch) — generous enough for slower CI runners, tight enough that a
+    # backlog pathology (p99 ~= total elapsed, ~9s+) or a cold compile
+    # leaking onto serving traffic still trips it
+    slo_p99_ms = 8000.0
+    with repro.serve(False, workers=2, max_batch=max_batch, max_queue=256,
+                     tenant_weights={"alpha": 1.0, "beta": 2.0}) as svc:
+        # warm every (program, batch-size) execution trace: BatchSession
+        # compiles one XLA trace per K, so serve K=1..max_batch up front
+        for name, mk in programs.items():
+            svc.run(name, g, tenant="warmup", **mk())
+            futs = [svc.submit(name, g, tenant="warmup", **mk())
+                    for _ in range(max_batch)]
+            for f in futs:
+                f.result()
+        jobs = [
+            (name, tenant, mk())
+            for name, mk in programs.items()
+            for tenant in ("alpha", "beta")
+            for _ in range(per_burst)
+        ]
+        t0 = time.perf_counter()
+        done = 0
+        for i in range(0, len(jobs), 8):  # closed-loop waves of 8
+            wave = [
+                svc.submit(name, g, tenant=tenant,
+                           deadline_s=deadline_s, **params)
+                for name, tenant, params in jobs[i:i + 8]
+            ]
+            for f in wave:
+                f.result()
+                done += 1
+        elapsed = time.perf_counter() - t0
+        snap = svc.stats()
+        lowerings = svc.registry.lowerings
+    tenants = {t: snap["tenants"][t] for t in ("alpha", "beta")}
+    q = snap["queries"]
+    return {
+        "programs": sorted(programs),
+        "queries": done,
+        "completed_measured": sum(t["completed"] for t in tenants.values()),
+        "errors": q["errors"],
+        "rejected_overloaded": q["rejected_overloaded"],
+        "rejected_deadline": q["rejected_deadline"],
+        "deadline_misses": q["deadline_misses"],
+        "deadline_s": deadline_s,
+        "p99_ms": round(max(t["latency_ms"]["p99_ms"]
+                            for t in tenants.values()), 3),
+        "p50_ms": round(max(t["latency_ms"]["p50_ms"]
+                            for t in tenants.values()), 3),
+        "slo_p99_ms": slo_p99_ms,
+        "throughput_qps": round(done / max(elapsed, 1e-9), 1),
+        "batch_occupancy": snap["batches"]["occupancy"],
+        "lowerings": lowerings,
+        "expected_lowerings": len(programs),
+    }
+
+
 def _time_workload(src, graph, params, options):
     """(cold compile+bind+first-run seconds, warm best-of-3 seconds, stats)."""
     import repro
@@ -296,6 +396,7 @@ def measure() -> dict:
         out["batched"][name] = _time_batched(src, graph, sets, floor)
     out["warm_bind"] = {"bfs_warm_bind": _time_warm_bind()}
     out["streaming"] = {"bfs_incremental": _time_streaming()}
+    out["serving"] = {"serve_mixed_slo": _time_serving()}
     return out
 
 
@@ -442,6 +543,64 @@ def check(ci: dict, baseline: dict, threshold: float) -> int:
             )
         else:
             print(f"ok   {name}.bit_identical: true")
+    # serving-tier SLO gates: admission/deadline/error invariants are exact
+    # and always fatal; the p99 SLO ceiling is deliberately generous (orders
+    # of magnitude above warm per-query latency) so it gates pathologies —
+    # cold compiles leaking onto serving traffic, scheduler stalls — not
+    # runner speed
+    base_serve = baseline.get("serving", {})
+    ci_serve = ci.get("serving", {})
+    for name in sorted(set(ci_serve) - set(base_serve)):
+        failures.append(
+            f"{name}: serving workload measured but absent from the "
+            f"baseline — refresh BENCH_baseline.json to gate it"
+        )
+    for name in sorted(base_serve):
+        got = ci_serve.get(name)
+        if got is None:
+            failures.append(f"{name}: serving workload missing from current run")
+            continue
+        p99 = got.get("p99_ms", float("inf"))
+        slo = got.get("slo_p99_ms") or base_serve[name].get("slo_p99_ms")
+        line = (f"{name}.p99_ms: {p99:.1f}ms "
+                f"(p50 {got.get('p50_ms')}ms, "
+                f"{got.get('throughput_qps')} qps, "
+                f"occupancy {got.get('batch_occupancy')})")
+        if slo is not None and p99 > slo:
+            failures.append(f"REGRESSION {line} > {slo}ms SLO ceiling")
+        else:
+            print(f"ok   {line} (SLO {slo}ms)")
+        dropped = (
+            got.get("rejected_deadline", 0) + got.get("rejected_overloaded", 0)
+            + got.get("deadline_misses", 0) + got.get("errors", 0)
+        )
+        if dropped:
+            failures.append(
+                f"REGRESSION {name}: {dropped} queries dropped/late "
+                f"(rejected_deadline={got.get('rejected_deadline')}, "
+                f"rejected_overloaded={got.get('rejected_overloaded')}, "
+                f"deadline_misses={got.get('deadline_misses')}, "
+                f"errors={got.get('errors')}) — expected 0 under this load"
+            )
+        else:
+            print(f"ok   {name}: zero rejections, misses, and errors")
+        if got.get("completed_measured") != got.get("queries"):
+            failures.append(
+                f"REGRESSION {name}: {got.get('completed_measured')}/"
+                f"{got.get('queries')} admitted queries completed"
+            )
+        else:
+            print(f"ok   {name}.completed: {got.get('completed_measured')}"
+                  f"/{got.get('queries')}")
+        if got.get("lowerings") != got.get("expected_lowerings"):
+            failures.append(
+                f"REGRESSION {name}: {got.get('lowerings')} lowerings for "
+                f"{got.get('expected_lowerings')} programs — repeat serving "
+                f"traffic must reuse resident sessions, not re-lower"
+            )
+        else:
+            print(f"ok   {name}.lowerings: {got.get('lowerings')} "
+                  f"(one per program)")
     for w in warnings:
         print(w)
     for f in failures:

@@ -14,17 +14,30 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import CompileOptions
+from repro.core import CompileOptions, Target
+from repro.core.program import compile_program
 from repro.graph.datasets import make_dataset
 from repro.algorithms import sources
-from repro.algorithms.runners import make_warm_runner
 from repro.baselines import thundergp as tg
 from repro.baselines.thundergp import TemplateLimitation
 
 from .common import DATASETS, DEFAULT_SCALE, csv_line, timed
 
-BASE = CompileOptions.baseline()
-FULL = CompileOptions.full()
+# substrate ablation on Target, pass pipeline on CompileOptions (the
+# baseline disables both — the paper's unoptimized handcrafted HLS)
+BASE = (Target.baseline(), CompileOptions(passes="none"))
+FULL = (Target(), CompileOptions())
+
+
+def _warm_runner(src, graph, variant, params):
+    target, opts = variant
+    session = compile_program(src, opts).bind(graph, target=target)
+
+    def run():
+        return session.run(**params)
+
+    run()  # warm: compile every kernel launch path before timing
+    return run
 
 ALGOS = {
     "PageRank": (sources.PAGERANK, {"iters": 20}, False),
@@ -66,8 +79,8 @@ def main(scale: float = DEFAULT_SCALE, datasets=None) -> list:
             ov = dict(ov)
             if algo in ("BFS", "SSSP"):
                 ov["root"] = root
-            run_b = make_warm_runner(src, graph, BASE, ov)
-            run_f = make_warm_runner(src, graph, FULL, ov)
+            run_b = _warm_runner(src, graph, BASE, ov)
+            run_f = _warm_runner(src, graph, FULL, ov)
             t_b, res_b = timed(run_b)
             t_f, res_f = timed(run_f)
             t_t = _tgp_time(algo, g, gw, root)

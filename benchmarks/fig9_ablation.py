@@ -2,31 +2,47 @@
 (burst-only / cache-only / shuffle-only) vs the full composition.
 Warm-engine timing (see fig8).
 
+Ablation axes live on :class:`repro.Target` (the substrate description);
+``CompileOptions`` carries only the MIR pass pipeline — each variant is
+``compile_program(src, CompileOptions(passes=...)).bind(g, target=...)``.
+
 Beyond-paper axis: ``fullNoPasses`` runs the full memory-optimization
 composition with the MIR optimization pass pipeline disabled
-(``CompileOptions.passes="none"``), isolating the contribution of kernel
-fusion / direction selection from the memory-access optimizations."""
+(``passes="none"``), isolating the contribution of kernel fusion /
+direction selection from the memory-access optimizations."""
 from __future__ import annotations
-
-from dataclasses import replace
 
 import numpy as np
 
-from repro.core import CompileOptions
+from repro.core import CompileOptions, Target
+from repro.core.program import compile_program
 from repro.graph.datasets import make_dataset
 from repro.algorithms import sources
-from repro.algorithms.runners import make_warm_runner
 
 from .common import DATASETS, DEFAULT_SCALE, csv_line, timed
 
+# name -> (target, MIR passes); the paper's single-axis points keep the
+# pass pipeline off so only the memory optimization under test moves
 VARIANTS = {
-    "baseline": CompileOptions.baseline(),
-    "withBurst": CompileOptions.with_only("burst"),
-    "withCache": CompileOptions.with_only("cache"),
-    "withShuffle": CompileOptions.with_only("shuffle"),
-    "fullNoPasses": replace(CompileOptions.full(), passes="none"),
-    "full": CompileOptions.full(),
+    "baseline": (Target.baseline(), "none"),
+    "withBurst": (Target.with_only("burst"), "none"),
+    "withCache": (Target.with_only("cache"), "none"),
+    "withShuffle": (Target.with_only("shuffle"), "none"),
+    "fullNoPasses": (Target(), "none"),
+    "full": (Target(), "default"),
 }
+
+
+def _warm_runner(src, graph, target, passes, params):
+    session = compile_program(src, CompileOptions(passes=passes)).bind(
+        graph, target=target
+    )
+
+    def run():
+        return session.run(**params)
+
+    run()  # warm: compile every kernel launch path before timing
+    return run
 
 
 def main(scale: float = DEFAULT_SCALE, datasets=None) -> list:
@@ -35,8 +51,9 @@ def main(scale: float = DEFAULT_SCALE, datasets=None) -> list:
         g = make_dataset(short, scale=scale, seed=0)
         root = int(np.argmax(g.out_degree))
         t_base = None
-        for name, opts in VARIANTS.items():
-            run = make_warm_runner(sources.BFS_ECP, g, opts, {"root": root})
+        for name, (target, passes) in VARIANTS.items():
+            run = _warm_runner(sources.BFS_ECP, g, target, passes,
+                               {"root": root})
             t, res = timed(run)
             if name == "baseline":
                 t_base = t

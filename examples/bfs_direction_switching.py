@@ -22,16 +22,14 @@ def main():
     root = int(np.argmax(g.out_degree))
     print(f"rmat graph: |V|={g.n_vertices} |E|={g.n_edges}, root={root}")
 
+    # substrate ablations live on Target; CompileOptions carries only the
+    # MIR pass pipeline (the baseline disables both)
     sessions = {
         "baseline (no optimizations)": repro.compile(
-            sources.BFS_ECP, repro.CompileOptions.baseline()
-        ).bind(g),
-        "graphitron ECP (full opts)": repro.compile(
-            sources.BFS_ECP, repro.CompileOptions.full()
-        ).bind(g),
-        "graphitron hybrid (Fig. 2)": repro.compile(
-            sources.BFS_HYBRID, repro.CompileOptions.full()
-        ).bind(g),
+            sources.BFS_ECP, repro.CompileOptions(passes="none")
+        ).bind(g, target=repro.Target.baseline()),
+        "graphitron ECP (full opts)": repro.compile(sources.BFS_ECP).bind(g),
+        "graphitron hybrid (Fig. 2)": repro.compile(sources.BFS_HYBRID).bind(g),
     }
 
     ref = None

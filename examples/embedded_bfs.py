@@ -77,7 +77,7 @@ def main():
     graph = generators.power_law(5_000, 60_000, seed=0)
 
     # 1. compile — same pipeline, same cache as repro.compile(".gt text")
-    program = repro.compile(p, repro.CompileOptions.full())
+    program = repro.compile(p)  # default options: full optimization
     print("=== MIR (identical to the text front-end's) ===")
     print(program.describe())
     print("\ndeclared parameters:",
@@ -86,7 +86,7 @@ def main():
     # 2. the embedded program also emits its own `.gt` text...
     print("\n=== to_source() round-trip ===")
     print("\n".join(program.source.splitlines()[:6]) + "\n...")
-    twin = repro.compile(p.to_source(), repro.CompileOptions.full())
+    twin = repro.compile(p.to_source())
     print("text twin shares the cache entry:", twin is program)
 
     # 3. bind + run exactly like any Program

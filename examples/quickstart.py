@@ -64,7 +64,7 @@ def main():
 
     # 1. compile once — the Program is cached on a content hash of
     #    (source, options) and knows its declared run-time parameters
-    program = repro.compile(SRC, repro.CompileOptions.full())
+    program = repro.compile(SRC)  # default options: full optimization
     print("=== MIR (the compiler's view of your program) ===")
     print(program.describe())
     print("\ndeclared parameters:",
@@ -92,7 +92,7 @@ def main():
 
     # the same Program binds to any number of graphs
     small = generators.power_law(500, 4_000, seed=1)
-    r_small = repro.compile(SRC, repro.CompileOptions.full()).bind(small).run()
+    r_small = repro.compile(SRC).bind(small).run()
     assert (r_small.properties["indeg"] == small.in_degree).all()
     print(f"re-bound to |V|={small.n_vertices}: "
           f"max in-degree {int(r_small.properties['indeg'].max())}")

@@ -13,7 +13,7 @@ from repro.graph.datasets import make_dataset
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "examples/algos/pagerank.gt"
     weighted = any(w in path for w in ("sssp", "cgaw"))
-    program = repro.compile(open(path).read(), repro.CompileOptions.full())
+    program = repro.compile(open(path).read())
     g = make_dataset("AM", scale=0.01, seed=0, weighted=weighted)
     session = program.bind(g, argv=["prog", "AM"])
     res = session.run()

@@ -22,6 +22,12 @@ warm-start new processes from a saved artifact:
     ...
     acc = repro.load_accelerator("artifacts/bfs")
     result = acc.bind(graph).run(root=3)    # shape check only, no compile
+
+Serving path (one call, resident/warm/cold picked automatically):
+
+    service = repro.serve()                 # GraphService over the
+    fut = service.submit("bfs", g, root=3)  #   artifact registry; async,
+    res = repro.run("pagerank", g, iters=20)  # batched, multi-tenant
 """
 
 from .core import (  # noqa: F401 - re-exported public API
@@ -32,6 +38,7 @@ from .core import (  # noqa: F401 - re-exported public API
     GraphShape,
     Program,
     ProgramError,
+    ServiceClosed,
     Session,
     SessionPool,
     Target,
@@ -44,8 +51,17 @@ from .core import (  # noqa: F401 - re-exported public API
 from .frontend import FrontendError, GraphProgram  # noqa: F401
 from .graph.storage import GraphDelta, GraphUpdateError  # noqa: F401
 from .streaming import StreamingSession  # noqa: F401
+from .serving import (  # noqa: F401
+    ArtifactRegistry,
+    DeadlineExceeded,
+    GraphService,
+    Overloaded,
+    ServingError,
+    run,
+    serve,
+)
 
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 __all__ = [
     "CompileOptions",
@@ -64,6 +80,14 @@ __all__ = [
     "StreamingSession",
     "GraphDelta",
     "GraphUpdateError",
+    "ArtifactRegistry",
+    "GraphService",
+    "ServingError",
+    "ServiceClosed",
+    "Overloaded",
+    "DeadlineExceeded",
+    "serve",
+    "run",
     "compile",
     "compile_program",
     "program_cache_info",

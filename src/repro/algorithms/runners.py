@@ -154,6 +154,34 @@ def make_warm_runner(
     backend: str = "local",
     aot: bool = False,
 ):
+    """Deprecated: use ``repro.run(src, graph, **params)`` / ``repro.serve()``.
+
+    The serving tier supersedes this wrapper — ``repro.run`` routes
+    through the same resident-session / warm-artifact / cold-compile
+    selection with registry-wide reuse, and ``repro.serve()`` adds
+    batching, tenants, and deadlines. Kept as a shim for existing
+    callers; emits a :class:`DeprecationWarning`.
+    """
+    import warnings
+
+    warnings.warn(
+        "make_warm_runner is deprecated: use repro.run(src, graph, **params) "
+        "for one-shot warm execution, or repro.serve() for a long-lived "
+        "GraphService (resident sessions, artifact warm starts, batching)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _make_warm_runner(src, graph, options, overrides, backend, aot)
+
+
+def _make_warm_runner(
+    src: Source,
+    graph: GraphData,
+    options: Optional[CompileOptions] = None,
+    overrides: Optional[dict] = None,
+    backend: str = "local",
+    aot: bool = False,
+):
     """Bind a session once (compiling all kernels on the first call) and
     return a zero-arg callable that re-runs it — the "post-synthesis
     accelerator execution" timing mode. ``src`` is text or embedded.

@@ -74,13 +74,21 @@ class DynamicBatcher:
         self._worker.start()
 
     def submit(self, params: Dict[str, Any]) -> "Future[Any]":
+        from ..core.session import ServiceClosed
+
         fut: "Future[Any]" = Future()
         with self._cond:
             if self._closed:
-                raise RuntimeError("DynamicBatcher is closed")
+                raise ServiceClosed("DynamicBatcher is closed")
             self._pending.append((dict(params), fut))
             self._cond.notify()
         return fut
+
+    @property
+    def queue_depth(self) -> int:
+        """Queries queued (not yet collected) + handed out but unresolved."""
+        with self._cond:
+            return len(self._pending) + self._in_flight
 
     # -- collector ----------------------------------------------------------
     def _take_batch(self) -> Optional[List[Tuple[Dict[str, Any], Future]]]:

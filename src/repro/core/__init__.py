@@ -53,6 +53,7 @@ from .semantic import analyze
 from .session import (
     BatchSession,
     ExecutionBackend,
+    ServiceClosed,
     Session,
     SessionError,
     SessionPool,
@@ -78,6 +79,7 @@ __all__ = [
     "BatchSession",
     "Session",
     "SessionError",
+    "ServiceClosed",
     "SessionPool",
     "ExecutionBackend",
     "batch_eligible",

@@ -669,6 +669,29 @@ class Accelerator:
         return path
 
 
+def quarantine_artifact(path: str) -> Optional[str]:
+    """Move a failed artifact directory aside so it is never re-probed.
+
+    Re-lowering after a load failure overwrites the directory in place
+    (``save`` is the normal heal path), but serving registries want the
+    failed content *out of the key's path* atomically — otherwise every
+    request between the failure and the heal retries the same corrupt
+    load (a stale-artifact retry storm). A rename keeps the bytes around
+    for postmortem under ``<path>.quarantined[.N]``. Best-effort: returns
+    the new path, or None when the store does not permit the rename.
+    """
+    for i in range(1000):
+        dst = f"{path}.quarantined" + ("" if i == 0 else f".{i}")
+        if os.path.exists(dst):
+            continue
+        try:
+            os.rename(path, dst)
+            return dst
+        except OSError:
+            return None
+    return None  # pragma: no cover - 1000 quarantines of one key
+
+
 def load_or_lower(program: "Program", target: Target, shape: GraphShape,
                   artifact_dir: str) -> Tuple[Accelerator, bool, float]:
     """Resolve an accelerator from an artifact store, lowering on a miss.

@@ -28,7 +28,8 @@ Two option groups remain here:
 Compat shim — the substrate fields that used to live here (``burst``,
 ``cache``, ``shuffle``, ``compact_frontier``, ``pallas``,
 ``n_partitions``, ``interpret``) are still accepted as constructor
-kwargs and still readable as attributes, but they are stored as
+kwargs (with a :class:`DeprecationWarning` naming the exact ``Target``
+replacement) and still readable as attributes, but they are stored as
 ``target_overrides`` and replayed onto a :class:`Target` by
 :meth:`Target.from_options` / :meth:`CompileOptions.resolve_target`.
 Overrides equal to the Target default are dropped at construction, so
@@ -39,6 +40,7 @@ working through the shim; new code should build a :class:`Target`.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -68,6 +70,17 @@ class CompileOptions:
                 f"unknown CompileOptions field(s) {unknown}; substrate fields "
                 f"moved to repro.Target — the accepted legacy kwargs are "
                 f"{list(LEGACY_OPTION_FIELDS)}"
+            )
+        if legacy:
+            repl = ", ".join(f"{k}={legacy[k]!r}" for k in sorted(legacy))
+            warnings.warn(
+                f"passing substrate kwargs to CompileOptions is deprecated; "
+                f"build a Target instead: repro.Target({repl}) — and pass it "
+                f"to program.lower(target, shape) or a bind "
+                f"(program.bind(graph, target=target)). CompileOptions now "
+                f"carries only passes/scalar_bindings.",
+                DeprecationWarning,
+                stacklevel=2,
             )
         merged = dict(target_overrides)
         merged.update(legacy)
@@ -131,9 +144,13 @@ class CompileOptions:
     def baseline() -> "CompileOptions":
         """Unoptimized reference: random scatter, no partitioning/caching,
         no MIR passes — one kernel per launch, exactly as authored."""
+        over = {
+            "burst": False, "cache": False, "shuffle": False,
+            "compact_frontier": False, "pallas": False,
+        }
         return CompileOptions(
-            passes="none", burst=False, cache=False, shuffle=False,
-            compact_frontier=False, pallas=False,
+            passes="none",
+            target_overrides=tuple(sorted(over.items())),
         )
 
     @staticmethod
@@ -149,4 +166,4 @@ class CompileOptions:
 
     @staticmethod
     def full(pallas: bool = False) -> "CompileOptions":
-        return CompileOptions(pallas=pallas)
+        return CompileOptions(target_overrides=(("pallas", pallas),))

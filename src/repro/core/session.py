@@ -47,6 +47,13 @@ class SessionError(Exception):
     pass
 
 
+class ServiceClosed(SessionError):
+    """Submission to a closed serving surface (pool, batcher, scheduler,
+    service). Typed so clients can distinguish "shut down, stop sending"
+    from a genuine execution failure — previously a closed pool could
+    surface a raw executor/queue RuntimeError instead."""
+
+
 @runtime_checkable
 class ExecutionBackend(Protocol):
     """What a backend must provide to host a Session.
@@ -499,7 +506,7 @@ class SessionPool:
         traffic hits (partial trailing batches still compile on first
         sight)."""
         if self._closed:
-            raise SessionError("SessionPool is closed")
+            raise ServiceClosed("SessionPool is closed")
         self.program.validate_params(params)
         futures = [self._executor.submit(s.run, **params) for s in self._sessions]
         for f in futures:
@@ -517,11 +524,16 @@ class SessionPool:
         produce.
         """
         if self._closed:
-            raise SessionError("SessionPool is closed")
+            raise ServiceClosed("SessionPool is closed")
         self.program.validate_params(params)  # fail fast on the caller thread
         if self._batcher is not None:
             return self._batcher.submit(params)
-        return self._executor.submit(self._run_one, params)
+        try:
+            return self._executor.submit(self._run_one, params)
+        except RuntimeError as e:
+            # close() raced this submit: the executor rejects with a raw
+            # RuntimeError("cannot schedule new futures after shutdown")
+            raise ServiceClosed("SessionPool is closed") from e
 
     def refresh_graph(self, graph: Optional[GraphData] = None) -> None:
         """Rebind every worker (and the shared BatchSession) after an
@@ -531,7 +543,7 @@ class SessionPool:
         must arrange the same.
         """
         if self._closed:
-            raise SessionError("SessionPool is closed")
+            raise ServiceClosed("SessionPool is closed")
         graph = graph if graph is not None else self.graph
         self.graph = graph
         if self._batcher is not None:
@@ -554,7 +566,7 @@ class SessionPool:
         on ineligible lists).
         """
         if self._closed:
-            raise SessionError("SessionPool is closed")
+            raise ServiceClosed("SessionPool is closed")
         sets = [dict(p) for p in param_sets]
         if batched is None:
             coerced = [self.program.validate_params(p) for p in sets]
@@ -600,6 +612,7 @@ __all__ = [
     "BatchSession",
     "Session",
     "SessionError",
+    "ServiceClosed",
     "SessionPool",
     "ProgramError",
     "batch_eligible",

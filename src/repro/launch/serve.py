@@ -4,15 +4,17 @@ LM path — batched prefill + decode with a KV cache. CPU smoke example:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 16 --gen-len 16
 
-Graph path — one compiled Program bound to one graph, many parameterized
-queries served through a SessionPool (compile once, bind once, answer N):
+Graph path — a thin client over the serving tier: ``repro.serve()`` stands
+up a :class:`~repro.serving.GraphService` (artifact registry + async
+scheduler + metrics) and this driver submits parameterized queries to it:
     PYTHONPATH=src python -m repro.launch.serve --graph bfs \
         --queries 32 --pool 4
 
 ``--batch N`` turns on dynamic batching: queued queries are collected into
-batches of up to N and answered by one vectorized BatchSession execution
-(bit-identical results, far fewer launches); the printed stats then include
-batch occupancy. Per-query latency percentiles are reported either way.
+batches of up to N and answered by one vectorized batched execution
+(bit-identical results, far fewer launches). Stats are the service's JSON
+metrics snapshot (per-tenant counters, latency percentiles, registry
+hits, batch occupancy) printed verbatim.
 
 ``--updates N`` switches the graph path to streaming serving: N edge-addition
 deltas are interleaved through the query stream via a StreamingSession —
@@ -20,12 +22,12 @@ in-place updates into the padding slack (no re-lowering), incremental repair
 for monotone programs — and per-version query latency plus update-apply
 latency are reported.
 
-``--artifact-dir DIR`` turns on accelerator warm-starting: the program is
-AOT-lowered once per (program, target, shape bucket) into a saved
-:class:`~repro.core.accelerator.Accelerator` artifact under DIR, and every
-later process start loads it instead of recompiling — pool workers then
-share the artifact's kernel library (no per-worker jit cost). The printed
-stats split cold compile time from warm run time so the win is observable.
+``--artifact-dir DIR`` overrides the service's artifact registry location
+(default: ``$REPRO_ARTIFACT_DIR`` / ``~/.cache/repro-artifacts``): the
+program is AOT-lowered once per (program, target, shape bucket) into a
+saved :class:`~repro.core.accelerator.Accelerator` artifact, and every
+later process start loads it instead of recompiling. The stats snapshot
+reports resident hits vs artifact hits vs cold lowerings.
 """
 from __future__ import annotations
 
@@ -91,28 +93,25 @@ def resolve_accelerator(program, graph, backend: str, artifact_dir: str,
 
 
 def serve_graph(args) -> int:
-    """Serve a batch of graph queries: compile once, bind once, run many.
+    """Serve a batch of graph queries through :func:`repro.serve`.
 
-    This is the Program/Session serving path: the DSL program is compiled
-    to one artifact, bound to one resident graph, and every query is a
-    ``session.run(**params)`` with explicit parameters — no per-query
-    recompilation, no host_env mutation.
+    Thin client over the serving tier: one ``repro.serve(registry_dir)``
+    call stands up the :class:`~repro.serving.GraphService` (artifact
+    registry with resident/warm/cold selection, async scheduler with
+    dynamic batching, metrics), and this driver only generates queries,
+    submits them, and prints ``service.stats()`` — the JSON snapshot is
+    the stats output, not hand-rolled counters.
     """
-    from ..algorithms import sources
-    from ..core.program import compile_program
-    from ..graph import generators
+    import json
 
-    src = {
-        "bfs": sources.BFS_ECP,
-        "pagerank": sources.PAGERANK,
-        "sssp": sources.SSSP,
-    }[args.graph]
+    from ..graph import generators
+    from ..serving import serve
+
     result_prop = {"bfs": "old_level", "pagerank": "rank", "sssp": "SP"}[args.graph]
     weighted = args.graph == "sssp"
     graph = generators.power_law(
         args.vertices, args.edges, seed=args.seed, weighted=weighted
     )
-    program = compile_program(src)
     rng = np.random.default_rng(args.seed)
     if args.graph == "pagerank":
         queries = [{"iters": int(i)} for i in rng.integers(5, 25, args.queries)]
@@ -120,76 +119,44 @@ def serve_graph(args) -> int:
         roots = rng.integers(0, graph.n_vertices, args.queries)
         queries = [{"root": int(r)} for r in roots]
 
-    mode = f"dynamic batching x{args.batch}" if args.batch > 1 else "per-worker"
+    max_batch = args.batch if args.batch and args.batch > 1 else 1
+    mode = f"dynamic batching x{max_batch}" if max_batch > 1 else "per-query"
+    registry_dir = args.artifact_dir if args.artifact_dir else None
     print(f"serving {args.queries} {args.graph} queries on |V|={graph.n_vertices} "
-          f"|E|={graph.n_edges} via {args.pool} sessions ({args.backend} backend, "
-          f"{mode})")
-    if args.artifact_dir:
-        accelerator = resolve_accelerator(
-            program, graph, args.backend, args.artifact_dir
-        )
-        pool_cm = accelerator.pool(graph, size=args.pool, batch=args.batch)
-    else:
-        pool_cm = program.pool(graph, size=args.pool, backend=args.backend,
-                               batch=args.batch)
-    with pool_cm as pool:
+          f"|E|={graph.n_edges} via repro.serve ({args.pool} workers, "
+          f"{args.backend} backend, {mode})")
+    with serve(registry_dir, backend=args.backend, workers=args.pool,
+               max_batch=max_batch) as service:
         t_warm = time.perf_counter()
-        pool.warmup(**queries[0])  # every worker jit-compiles its kernels
+        # first query resolves resident/warm-artifact/cold-compile
+        first = service.run(args.graph, graph, **queries[0])
         warm_s = time.perf_counter() - t_warm
-        # submit the whole stream; per-query latency = submit -> resolve.
-        # Latencies are recorded by done-callbacks (completion order, not
-        # submission order); f.result() can return before the callback has
-        # fired on the worker thread, so a semaphore gates the percentile
-        # computation on every callback having written its slot.
-        import threading
-
-        latencies = [0.0] * len(queries)
-        recorded = threading.Semaphore(0)
-
-        def _record(i, t_sub):
-            def cb(_fut):
-                latencies[i] = time.perf_counter() - t_sub
-                recorded.release()
-            return cb
-
         t0 = time.perf_counter()
-        futures = []
-        for i, q in enumerate(queries):
-            t_sub = time.perf_counter()
-            fut = pool.submit(**q)
-            fut.add_done_callback(_record(i, t_sub))
-            futures.append(fut)
+        futures = [service.submit(args.graph, graph, **q) for q in queries]
         results = [f.result() for f in futures]
         dt = time.perf_counter() - t0
-        for _ in queries:
-            recorded.acquire(timeout=60)
-        batch_stats = pool.batch_stats
+        stats = service.stats()
     assert len(results) == len(queries)
-    # results of one batch share one stats object (batch_size = K): count
-    # each underlying execution once, then amortize per query
-    uniq = {id(r.stats): r.stats for r in results}
-    total_iters = sum(s.host_iterations for s in uniq.values())
-    total_launches = sum(s.total_launches for s in uniq.values())
-    # cold-vs-warm split: compile_time is first-touch executable cost; with
-    # --artifact-dir (AOT warm start) it should be ~0 across the stream
-    total_compile = sum(s.compile_time_s for s in uniq.values())
-    total_run = sum(s.run_time_s for s in uniq.values())
-    sample = np.asarray(results[0].properties[result_prop])
-    lat = np.asarray(latencies) * 1e3  # ms
-    p50, p90, p99 = np.percentile(lat, [50, 90, 99])
+    sample = np.asarray(first.properties[result_prop])
+    lat = stats["queries"]["latency_ms"]
+    reg = stats["registry"]
+    how = ("resident" if reg["resident_hits"] else
+           "warm artifact" if reg["artifact_hits"] else "cold compile")
     print(f"answered {len(results)} queries in {dt:.3f}s "
-          f"({len(results) / dt:.1f} qps, {total_iters} host iterations, "
-          f"{total_launches} kernel launches, "
-          f"{total_launches / len(results):.1f} launches/query)")
-    print(f"latency per query: p50={p50:.1f}ms p90={p90:.1f}ms p99={p99:.1f}ms")
-    print(f"engine time split: compile(cold)={total_compile:.3f}s "
-          f"run(warm)={total_run:.3f}s across {len(uniq)} executions")
-    if batch_stats is not None:
-        print(f"dynamic batching: {batch_stats.batches} batches for "
-              f"{batch_stats.queries} queries, occupancy "
-              f"{batch_stats.occupancy:.0%} of max_batch={batch_stats.max_batch}")
+          f"({len(results) / dt:.1f} qps)")
+    print(f"latency per query: p50={lat['p50_ms']:.1f}ms "
+          f"p90={lat['p90_ms']:.1f}ms p99={lat['p99_ms']:.1f}ms")
+    print(f"first query start: {how} in {warm_s:.3f}s "
+          f"(store: {reg['store_dir']})")
+    b = stats["batches"]
+    if b["batches"]:
+        print(f"dynamic batching: {b['batches']} batches for {b['queries']} "
+              f"queries, occupancy {b['occupancy']:.0%} of "
+              f"max_batch={b['max_batch']}")
     print(f"first result ({result_prop}): min={sample.min():.4g} "
-          f"max={sample.max():.4g} warmup={warm_s:.3f}s for {args.pool} workers")
+          f"max={sample.max():.4g}")
+    print("service stats snapshot:")
+    print(json.dumps(stats, indent=2, sort_keys=True))
     return 0
 
 

@@ -1,0 +1,229 @@
+"""Serving metrics: counters + latency histograms, exported as JSON.
+
+One :class:`ServeMetrics` instance backs a :class:`~repro.serving.service.
+GraphService`. Everything is in-process and lock-protected — the serving
+tier's observability contract is a *snapshot*, not a push pipeline:
+``snapshot()`` returns a plain JSON-serializable dict with
+
+* global and per-tenant / per-program query counters (submitted,
+  completed, errors, overloaded rejections, deadline rejections,
+  deadline misses) and latency percentiles,
+* batch-formation accounting (batches, queries, occupancy against the
+  scheduler's ``max_batch``),
+* registry traffic (resident hits, warm artifact loads, cold lowerings,
+  evictions, quarantined artifacts, single-flight shared builds).
+
+Latency percentiles come from :class:`LatencyHistogram` — fixed
+geometric buckets (no per-sample storage, bounded memory for long-lived
+services); a reported percentile is the upper bound of its bucket, so it
+errs pessimistic by at most the bucket ratio (~1.35x).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = ["LatencyHistogram", "ServeMetrics"]
+
+# geometric bucket boundaries: 0.1ms * 1.35^i — 48 buckets span ~0.1ms to
+# ~180s, far wider than any sane graph-query latency
+_BUCKET_BASE_S = 1e-4
+_BUCKET_RATIO = 1.35
+_N_BUCKETS = 48
+
+
+def _bucket_bounds() -> List[float]:
+    bounds = []
+    b = _BUCKET_BASE_S
+    for _ in range(_N_BUCKETS):
+        bounds.append(b)
+        b *= _BUCKET_RATIO
+    return bounds
+
+
+_BOUNDS = _bucket_bounds()
+
+
+class LatencyHistogram:
+    """Fixed-bucket latency histogram with percentile readout.
+
+    Not thread-safe on its own; :class:`ServeMetrics` serializes access.
+    """
+
+    def __init__(self) -> None:
+        self.counts = [0] * (_N_BUCKETS + 1)  # +1 overflow bucket
+        self.total = 0
+        self.sum_s = 0.0
+        self.max_s = 0.0
+
+    def record(self, seconds: float) -> None:
+        seconds = max(0.0, float(seconds))
+        lo, hi = 0, _N_BUCKETS
+        while lo < hi:  # first bucket whose upper bound >= seconds
+            mid = (lo + hi) // 2
+            if _BOUNDS[mid] >= seconds:
+                hi = mid
+            else:
+                lo = mid + 1
+        self.counts[lo] += 1
+        self.total += 1
+        self.sum_s += seconds
+        self.max_s = max(self.max_s, seconds)
+
+    def percentile(self, q: float) -> float:
+        """Upper bound (seconds) of the bucket holding the q-th percentile."""
+        if not self.total:
+            return 0.0
+        rank = max(1, int(q / 100.0 * self.total + 0.9999))
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank:
+                return _BOUNDS[i] if i < _N_BUCKETS else self.max_s
+        return self.max_s  # pragma: no cover - rank <= total by construction
+
+    def snapshot(self) -> Dict[str, float]:
+        mean = self.sum_s / self.total if self.total else 0.0
+        return {
+            "count": self.total,
+            "mean_ms": round(mean * 1e3, 3),
+            "p50_ms": round(self.percentile(50) * 1e3, 3),
+            "p90_ms": round(self.percentile(90) * 1e3, 3),
+            "p99_ms": round(self.percentile(99) * 1e3, 3),
+            "max_ms": round(self.max_s * 1e3, 3),
+        }
+
+
+class _Group:
+    """Counter bundle for one key (a tenant or a program label)."""
+
+    __slots__ = (
+        "submitted", "completed", "errors", "rejected_overloaded",
+        "rejected_deadline", "deadline_misses", "latency",
+    )
+
+    def __init__(self) -> None:
+        self.submitted = 0
+        self.completed = 0
+        self.errors = 0
+        self.rejected_overloaded = 0
+        self.rejected_deadline = 0
+        self.deadline_misses = 0
+        self.latency = LatencyHistogram()
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "errors": self.errors,
+            "rejected_overloaded": self.rejected_overloaded,
+            "rejected_deadline": self.rejected_deadline,
+            "deadline_misses": self.deadline_misses,
+            "latency_ms": self.latency.snapshot(),
+        }
+
+
+_REGISTRY_EVENTS = (
+    "resident_hits",
+    "artifact_hits",
+    "cold_lowerings",
+    "evictions",
+    "quarantined",
+    "single_flight_shared",
+)
+
+
+class ServeMetrics:
+    """Thread-safe counters + histograms for one serving instance."""
+
+    def __init__(self, max_batch: int = 1) -> None:
+        self._lock = threading.Lock()
+        self._t0 = time.monotonic()
+        self.max_batch = max_batch
+        self._global = _Group()
+        self._tenants: Dict[str, _Group] = {}
+        self._programs: Dict[str, _Group] = {}
+        self._batches = 0
+        self._batched_queries = 0
+        self._registry = {k: 0 for k in _REGISTRY_EVENTS}
+        # filled by the service so snapshots carry instantaneous depth
+        self.queue_depth_fn: Optional[Callable[[], int]] = None
+
+    def _groups(self, tenant: str, label: str) -> List[_Group]:
+        return [
+            self._global,
+            self._tenants.setdefault(tenant, _Group()),
+            self._programs.setdefault(label, _Group()),
+        ]
+
+    # -- request path --------------------------------------------------------
+    def submitted(self, tenant: str, label: str) -> None:
+        with self._lock:
+            for g in self._groups(tenant, label):
+                g.submitted += 1
+
+    def rejected(self, tenant: str, label: str, kind: str) -> None:
+        """kind: 'overloaded' (queue full) | 'deadline' (expired in queue)."""
+        field = (
+            "rejected_overloaded" if kind == "overloaded"
+            else "rejected_deadline"
+        )
+        with self._lock:
+            for g in self._groups(tenant, label):
+                setattr(g, field, getattr(g, field) + 1)
+
+    def completed(self, tenant: str, label: str, latency_s: float,
+                  deadline_missed: bool = False) -> None:
+        with self._lock:
+            for g in self._groups(tenant, label):
+                g.completed += 1
+                g.latency.record(latency_s)
+                if deadline_missed:
+                    g.deadline_misses += 1
+
+    def error(self, tenant: str, label: str) -> None:
+        with self._lock:
+            for g in self._groups(tenant, label):
+                g.errors += 1
+
+    # -- batch formation -----------------------------------------------------
+    def batch(self, size: int) -> None:
+        with self._lock:
+            self._batches += 1
+            self._batched_queries += size
+
+    # -- registry traffic ----------------------------------------------------
+    def registry_event(self, kind: str, n: int = 1) -> None:
+        if kind not in self._registry:
+            raise ValueError(f"unknown registry event {kind!r}")
+        with self._lock:
+            self._registry[kind] += n
+
+    # -- export --------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            occupancy = (
+                self._batched_queries / (self._batches * self.max_batch)
+                if self._batches and self.max_batch else 0.0
+            )
+            snap: Dict[str, Any] = {
+                "uptime_s": round(time.monotonic() - self._t0, 3),
+                "queries": self._global.snapshot(),
+                "tenants": {t: g.snapshot() for t, g in self._tenants.items()},
+                "programs": {p: g.snapshot() for p, g in self._programs.items()},
+                "batches": {
+                    "batches": self._batches,
+                    "queries": self._batched_queries,
+                    "max_batch": self.max_batch,
+                    "occupancy": round(occupancy, 4),
+                },
+                "registry": dict(self._registry),
+            }
+        fn = self.queue_depth_fn
+        snap["queue_depth"] = int(fn()) if fn is not None else 0
+        return snap
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)

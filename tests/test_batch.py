@@ -28,7 +28,7 @@ from repro.algorithms import embedded, sources
 from repro.batch import DynamicBatcher, match_msbfs
 from repro.core import CompileOptions
 from repro.core.program import ProgramError
-from repro.core.session import SessionError
+from repro.core.session import ServiceClosed, SessionError
 from repro.graph import generators
 
 PASSES_OFF = CompileOptions(passes="none")
@@ -368,7 +368,7 @@ def test_dynamic_batcher_propagates_errors():
     with pytest.raises(ValueError):
         fut.result(timeout=60)
     b.close()
-    with pytest.raises(RuntimeError):
+    with pytest.raises(ServiceClosed):
         b.submit({"x": 2})
 
 

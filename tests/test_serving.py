@@ -1,0 +1,491 @@
+"""Serving tier: artifact registry + async scheduler behind repro.serve().
+
+Acceptance criteria of the serving PR:
+
+* ``repro.serve()`` / ``GraphService.submit`` pick the cheapest execution
+  path automatically — already-resident session, warm on-disk artifact,
+  or cold compile — observable via ``EngineStats.compile_time_s == 0`` on
+  warm paths and the registry hit counters;
+* registry concurrency: parallel submits for one fingerprint perform
+  exactly ONE lowering (single-flight); eviction under a size-1 registry
+  never tears down an entry a query still pins; stale-fingerprint
+  artifacts are quarantined (renamed aside + negative entry), not
+  re-probed on every miss;
+* the scheduler sheds load with typed :class:`Overloaded`, fails expired
+  queued requests with :class:`DeadlineExceeded`, and serves weighted
+  tenants proportionally;
+* every closed serving surface (SessionPool, DynamicBatcher, scheduler,
+  GraphService) rejects submissions with typed :class:`ServiceClosed`;
+* ``repro.run`` one-shots route through the same selection (second call
+  pays zero compile time), and ``make_warm_runner`` + the CompileOptions
+  legacy-kwargs shim emit DeprecationWarnings naming the replacement.
+"""
+import json
+import os
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.algorithms import sources
+from repro.batch.dynamic import DynamicBatcher
+from repro.core import CompileOptions, ServiceClosed, Target
+from repro.core.accelerator import GraphShape
+from repro.core.program import compile_program
+from repro.graph import generators
+from repro.graph.storage import GraphDelta
+from repro.serving import (
+    ArtifactRegistry,
+    DeadlineExceeded,
+    GraphService,
+    Overloaded,
+    RequestScheduler,
+    reset_default_service,
+)
+from repro.serving.metrics import LatencyHistogram
+
+
+@pytest.fixture
+def graph():
+    return generators.uniform_random(200, 1200, seed=3)
+
+
+@pytest.fixture
+def bfs():
+    return compile_program(sources.BFS_ECP)
+
+
+# ---------------------------------------------------------------------------
+# registry: single-flight, eviction, quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_acquire_single_flight(graph, bfs):
+    reg = ArtifactRegistry(None, max_resident=4)
+    target = Target()
+    entries, errors = [], []
+
+    def worker():
+        try:
+            e = reg.acquire(bfs, graph, target)
+            entries.append(e)
+            e.release()
+        except BaseException as exc:  # pragma: no cover - diagnostic
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert reg.lowerings == 1  # one compile served all 8
+    assert len({id(e) for e in entries}) == 1
+    reg.close()
+
+
+def test_parallel_service_submit_single_flight(graph, bfs, tmp_path):
+    # max_batch=1 so the 8 submits dispatch as 8 concurrent executions
+    # racing registry.acquire — still exactly one lowering
+    with repro.serve(str(tmp_path), workers=4, max_batch=1) as svc:
+        futs = [svc.submit(bfs, graph, root=r) for r in range(8)]
+        levels = [f.result().properties["old_level"] for f in futs]
+        assert svc.registry.lowerings == 1
+    seq = compile_program(sources.BFS_ECP).bind(graph)
+    for r, lvl in enumerate(levels):
+        np.testing.assert_array_equal(
+            np.asarray(lvl), np.asarray(seq.run(root=r).properties["old_level"])
+        )
+
+
+def test_size1_eviction_keeps_inflight_safe(graph):
+    # two programs ping-pong through a size-1 registry: constant eviction
+    # churn while queries are in flight on both entries
+    with repro.serve(False, workers=2, max_batch=1, max_resident=1) as svc:
+        futs = []
+        for i in range(6):
+            futs.append(svc.submit("bfs", graph, root=i))
+            futs.append(svc.submit("pagerank", graph, iters=5 + i))
+        results = [f.result() for f in futs]
+        assert all(r is not None for r in results)
+        stats = svc.stats()
+        assert stats["queries"]["errors"] == 0
+        assert stats["queries"]["completed"] == 12
+        assert stats["registry"]["evictions"] >= 1
+        assert stats["registry"]["resident"] <= 1
+
+
+def test_stale_artifact_quarantined_not_retried(graph, bfs, tmp_path):
+    store = str(tmp_path)
+    target = Target()
+    shape = GraphShape.of(graph)
+    from repro.core.accelerator import accelerator_fingerprint
+
+    key = accelerator_fingerprint(bfs.fingerprint, target, shape)
+    path = os.path.join(store, key[:24])
+
+    reg = ArtifactRegistry(store)
+    reg.acquire(bfs, graph, target).release()
+    reg.close()
+    assert os.path.isdir(path)
+
+    # tamper: the stored source no longer matches the fingerprint
+    with open(os.path.join(path, "program.gt"), "a") as f:
+        f.write("\n// drift\n")
+
+    reg2 = ArtifactRegistry(store)
+    entry = reg2.acquire(bfs, graph, target)
+    entry.release()
+    snap = reg2.metrics.snapshot()["registry"]
+    assert snap["quarantined"] == 1
+    assert snap["artifact_hits"] == 0
+    assert reg2.lowerings == 1  # cold compile, not a retry loop
+    assert os.path.isdir(path + ".quarantined")  # bytes kept for postmortem
+    reg2.close()
+
+    # the fresh save healed the store: a third process warm-starts
+    reg3 = ArtifactRegistry(store)
+    reg3.acquire(bfs, graph, target).release()
+    snap3 = reg3.metrics.snapshot()["registry"]
+    assert snap3["artifact_hits"] == 1
+    assert reg3.lowerings == 0
+    reg3.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: admission control, deadlines, fairness
+# ---------------------------------------------------------------------------
+
+
+def _blocking_execute(started, release):
+    def execute(job, param_sets):
+        started.set()
+        assert release.wait(timeout=30)
+        return [dict(p) for p in param_sets]
+
+    return execute
+
+
+def test_overloaded_typed_rejection():
+    started, release = threading.Event(), threading.Event()
+    sched = RequestScheduler(
+        _blocking_execute(started, release),
+        workers=1, max_batch=1, max_queue=2, max_wait_s=0.0,
+    )
+    try:
+        f0 = sched.submit("job", {"i": 0}, group_key="g")
+        assert started.wait(timeout=10)  # worker is now occupied
+        f1 = sched.submit("job", {"i": 1}, group_key="g")
+        f2 = sched.submit("job", {"i": 2}, group_key="g")
+        with pytest.raises(Overloaded):
+            sched.submit("job", {"i": 3}, group_key="g")
+        snap = sched.metrics.snapshot()
+        assert snap["queries"]["rejected_overloaded"] == 1
+        release.set()
+        assert f0.result(timeout=10)["i"] == 0
+        assert f1.result(timeout=10)["i"] == 1
+        assert f2.result(timeout=10)["i"] == 2
+    finally:
+        release.set()
+        sched.close()
+
+
+def test_deadline_exceeded_in_queue():
+    started, release = threading.Event(), threading.Event()
+    sched = RequestScheduler(
+        _blocking_execute(started, release),
+        workers=1, max_batch=1, max_queue=8, max_wait_s=0.0,
+    )
+    try:
+        f0 = sched.submit("job", {"i": 0}, group_key="g")
+        assert started.wait(timeout=10)
+        f1 = sched.submit("job", {"i": 1}, group_key="g", deadline_s=0.05)
+        with pytest.raises(DeadlineExceeded):
+            f1.result(timeout=10)  # failed on time, without an exec slot
+        release.set()
+        assert f0.result(timeout=10)["i"] == 0
+        snap = sched.metrics.snapshot()
+        assert snap["queries"]["rejected_deadline"] == 1
+        assert snap["queries"]["completed"] == 1
+    finally:
+        release.set()
+        sched.close()
+
+
+def test_weighted_tenant_fairness():
+    started, release = threading.Event(), threading.Event()
+    order = []
+    lock = threading.Lock()
+
+    def execute(job, param_sets):
+        if job == "plug":
+            started.set()
+            assert release.wait(timeout=30)
+        else:
+            with lock:
+                order.extend(p["tenant"] for p in param_sets)
+        return [dict(p) for p in param_sets]
+
+    sched = RequestScheduler(
+        execute, workers=1, max_batch=1, max_queue=64, max_wait_s=0.0,
+        tenant_weights={"heavy": 3.0, "light": 1.0},
+    )
+    try:
+        plug = sched.submit("plug", {}, group_key="plug", tenant="warm")
+        assert started.wait(timeout=10)
+        futs = []
+        # both queues full before the worker frees up
+        for i in range(8):
+            futs.append(sched.submit(
+                "q", {"tenant": "light"}, group_key="l", tenant="light"))
+        for i in range(8):
+            futs.append(sched.submit(
+                "q", {"tenant": "heavy"}, group_key="h", tenant="heavy"))
+        release.set()
+        plug.result(timeout=10)
+        for f in futs:
+            f.result(timeout=30)
+        first8 = order[:8]
+        # served/weight argmin: the weight-3 tenant gets ~3x the early slots
+        assert first8.count("heavy") >= 2 * first8.count("light")
+    finally:
+        release.set()
+        sched.close()
+
+
+def test_deadline_caps_batch_fill_wait():
+    # a forming batch must not wait out max_wait_s when its head's
+    # deadline is nearer: the fill window is capped by the deadline
+    done = threading.Event()
+
+    def execute(job, param_sets):
+        done.set()
+        return [dict(p) for p in param_sets]
+
+    sched = RequestScheduler(
+        execute, workers=1, max_batch=8, max_queue=8, max_wait_s=5.0,
+    )
+    try:
+        t0 = time.monotonic()
+        f = sched.submit("job", {"i": 0}, group_key="g", deadline_s=0.1)
+        assert f.result(timeout=10)["i"] == 0
+        assert time.monotonic() - t0 < 2.0  # not the 5s straggler window
+    finally:
+        sched.close()
+
+
+# ---------------------------------------------------------------------------
+# ServiceClosed: typed rejection from every closed surface
+# ---------------------------------------------------------------------------
+
+
+def test_service_closed_everywhere(graph, bfs):
+    pool = bfs.pool(graph, size=1)
+    pool.close()
+    with pytest.raises(ServiceClosed):
+        pool.submit(root=0)
+    with pytest.raises(ServiceClosed):
+        pool.warmup(root=0)
+    with pytest.raises(ServiceClosed):
+        pool.run_batch([{"root": 0}])
+    with pytest.raises(ServiceClosed):
+        pool.refresh_graph()
+
+    batcher = DynamicBatcher(lambda ps: ps, max_batch=2)
+    batcher.close()
+    with pytest.raises(ServiceClosed):
+        batcher.submit({"root": 0})
+
+    sched = RequestScheduler(lambda job, ps: ps, workers=1)
+    sched.close()
+    with pytest.raises(ServiceClosed):
+        sched.submit("job", {}, group_key="g")
+
+    svc = GraphService(False, workers=1)
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit("bfs", graph, root=0)
+    with pytest.raises(ServiceClosed):
+        svc.update("bfs", graph, GraphDelta())
+
+    # ServiceClosed stays a SessionError: pre-typed handlers keep working
+    from repro.core import SessionError
+
+    assert issubclass(ServiceClosed, SessionError)
+
+
+# ---------------------------------------------------------------------------
+# warm-path selection through the public surface
+# ---------------------------------------------------------------------------
+
+
+def test_submit_picks_resident_session(graph, tmp_path):
+    with repro.serve(str(tmp_path), workers=1, max_batch=1) as svc:
+        first = svc.run("bfs", graph, root=0)
+        warm = svc.run("bfs", graph, root=1)
+        assert first.stats.compile_time_s > 0  # cold lowering
+        assert warm.stats.compile_time_s == 0.0  # resident session reuse
+        reg = svc.stats()["registry"]
+        assert reg["cold_lowerings"] == 1
+        assert reg["resident_hits"] >= 1
+
+
+def test_cross_service_warm_artifact(graph, tmp_path):
+    with repro.serve(str(tmp_path), workers=1, max_batch=1) as svc:
+        svc.run("bfs", graph, root=0)
+        assert svc.stats()["registry"]["cold_lowerings"] == 1
+    # a new service (fresh process stand-in) warm-starts from the store:
+    # zero lowerings, and resident reruns stay compile-free
+    with repro.serve(str(tmp_path), workers=1, max_batch=1) as svc2:
+        svc2.run("bfs", graph, root=0)
+        warm = svc2.run("bfs", graph, root=1)
+        reg = svc2.stats()["registry"]
+        assert reg["artifact_hits"] == 1
+        assert reg["cold_lowerings"] == 0
+        assert svc2.registry.lowerings == 0
+        assert warm.stats.compile_time_s == 0.0
+
+
+def test_run_one_shot_routes_through_default_service(graph, tmp_path,
+                                                    monkeypatch):
+    monkeypatch.setenv("REPRO_ARTIFACT_DIR", str(tmp_path))
+    reset_default_service()
+    try:
+        first = repro.run("bfs", graph, root=0)
+        again = repro.run("bfs", graph, root=0)
+        assert (np.asarray(first.properties["old_level"])
+                == np.asarray(again.properties["old_level"])).all()
+        assert again.stats.compile_time_s == 0.0  # resident reuse
+        from repro.serving.service import default_service
+
+        assert default_service().registry.lowerings == 1
+    finally:
+        reset_default_service()
+
+
+def test_named_source_and_program_inputs_share_entry(graph):
+    # "bfs", the raw source text, and the compiled Program all resolve to
+    # one fingerprint — one lowering serves all three input styles
+    with repro.serve(False, workers=1, max_batch=1) as svc:
+        svc.run("bfs", graph, root=0)
+        svc.run(sources.BFS_ECP, graph, root=1)
+        svc.run(compile_program(sources.BFS_ECP), graph, root=2)
+        assert svc.registry.lowerings == 1
+        assert svc.stats()["registry"]["resident_hits"] == 2
+
+
+def test_submit_validates_params_on_caller(graph):
+    with repro.serve(False, workers=1) as svc:
+        with pytest.raises(repro.ProgramError):
+            svc.submit("bfs", graph, rooot=3)
+        with pytest.raises(repro.ProgramError):
+            svc.submit("this is not a .gt program", graph)
+    from repro.serving import NAMED_ALGORITHMS
+
+    with pytest.raises(KeyError):
+        NAMED_ALGORITHMS["not_an_algorithm_name"]
+
+
+# ---------------------------------------------------------------------------
+# streaming updates through the service (versioned graphs as tenants)
+# ---------------------------------------------------------------------------
+
+
+def test_service_update_bumps_version_in_place():
+    base = generators.uniform_random(300, 1800, seed=5)
+    shape = GraphShape.bucket_for(base.n_vertices, base.n_edges)
+    g = base.pad_to(shape.n_vertices, shape.n_edges)
+    rng = np.random.default_rng(7)
+    with repro.serve(False, workers=1, max_batch=1) as svc:
+        r0 = svc.run("bfs", g, root=0, tenant="v0")
+        assert r0.version == 0
+        edges = rng.integers(0, base.n_vertices, size=(16, 2)).astype(np.int32)
+        v = svc.update("bfs", g, GraphDelta(added_edges=edges))
+        assert v == 1
+        r1 = svc.run("bfs", g, root=0, tenant="v1")
+        assert r1.version == 1
+        # in-bucket update: refresh is shape-check-only, no re-lowering
+        assert r1.stats.compile_time_s == 0.0
+        assert svc.registry.lowerings == 1
+        # results match a fresh bind of the updated graph
+        fresh = compile_program(sources.BFS_ECP).bind(g).run(root=0)
+        np.testing.assert_array_equal(
+            np.asarray(r1.properties["old_level"]),
+            np.asarray(fresh.properties["old_level"]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for ms in range(1, 101):  # 1ms..100ms uniform
+        h.record(ms / 1e3)
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    # bucketed upper bounds: within one geometric step of the true value
+    assert 0.045 <= snap["p50_ms"] / 1e3 <= 0.075
+    assert 0.09 <= snap["p99_ms"] / 1e3 <= 0.15
+    assert snap["max_ms"] == 100.0
+    assert LatencyHistogram().snapshot()["p99_ms"] == 0.0
+
+
+def test_stats_snapshot_is_json_per_tenant(graph):
+    with repro.serve(False, workers=2, max_batch=4,
+                     tenant_weights={"a": 1.0, "b": 2.0}) as svc:
+        futs = [svc.submit("bfs", graph, root=i, tenant="a",
+                           deadline_s=60.0) for i in range(3)]
+        futs += [svc.submit("bfs", graph, root=i, tenant="b")
+                 for i in range(2)]
+        for f in futs:
+            f.result()
+        snap = svc.stats()
+    encoded = json.loads(json.dumps(snap))  # JSON-serializable end to end
+    assert encoded["queries"]["submitted"] == 5
+    assert encoded["queries"]["completed"] == 5
+    assert encoded["queries"]["deadline_misses"] == 0
+    assert encoded["tenants"]["a"]["submitted"] == 3
+    assert encoded["tenants"]["b"]["submitted"] == 2
+    assert encoded["programs"]["bfs"]["completed"] == 5
+    assert encoded["tenants"]["a"]["latency_ms"]["p99_ms"] > 0
+    assert encoded["batches"]["queries"] == 5
+    assert 0 < encoded["batches"]["occupancy"] <= 1
+    assert encoded["queue_depth"] == 0
+    assert encoded["uptime_s"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# deprecations (the api_redesign satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_make_warm_runner_deprecated(graph):
+    from repro.algorithms.runners import make_warm_runner
+
+    with pytest.warns(DeprecationWarning, match="repro.run"):
+        run = make_warm_runner(sources.BFS_ECP, graph, None, {"root": 0})
+    assert run().properties["old_level"] is not None
+
+
+def test_compile_options_legacy_kwargs_deprecated():
+    with pytest.warns(DeprecationWarning) as rec:
+        opts = CompileOptions(burst=False, pallas=True)
+    # the message names the exact Target(...) replacement
+    assert "Target(burst=False, pallas=True)" in str(rec[0].message)
+    assert opts.burst is False and opts.pallas is True
+
+    # the new-style spellings stay silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        CompileOptions()
+        CompileOptions(passes="none")
+        CompileOptions.baseline()
+        CompileOptions.with_only("burst")
+        CompileOptions.full(pallas=True)
+        CompileOptions(target_overrides=(("burst", False),))
