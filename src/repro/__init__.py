@@ -28,6 +28,18 @@ Serving path (one call, resident/warm/cold picked automatically):
     service = repro.serve()                 # GraphService over the
     fut = service.submit("bfs", g, root=3)  #   artifact registry; async,
     res = repro.run("pagerank", g, iters=20)  # batched, multi-tenant
+
+Static analysis (lint + determinism certificates, both front-ends):
+
+    result = repro.analyze(src)             # AnalysisResult, never raises
+    result.errors                           # GT1xx scatter races, ...
+    result.certificate                      # deterministic / reduction-
+                                            #   deterministic / racy
+    repro.compile(src, strict=True)         # errors -> ProgramError
+
+``python -m repro.lint [--json] file.gt|module:program`` is the CLI twin;
+:meth:`GraphService.submit` rejects error-level programs with
+:class:`ProgramRejected` before they reach the registry.
 """
 
 from .core import (  # noqa: F401 - re-exported public API
@@ -48,6 +60,7 @@ from .core import (  # noqa: F401 - re-exported public API
     program_cache_info,
     set_program_cache_limit,
 )
+from .analysis import AnalysisResult, Diagnostic, analyze  # noqa: F401
 from .frontend import FrontendError, GraphProgram  # noqa: F401
 from .graph.storage import GraphDelta, GraphUpdateError  # noqa: F401
 from .streaming import StreamingSession  # noqa: F401
@@ -56,6 +69,7 @@ from .serving import (  # noqa: F401
     DeadlineExceeded,
     GraphService,
     Overloaded,
+    ProgramRejected,
     ServingError,
     run,
     serve,
@@ -86,8 +100,12 @@ __all__ = [
     "ServiceClosed",
     "Overloaded",
     "DeadlineExceeded",
+    "ProgramRejected",
     "serve",
     "run",
+    "analyze",
+    "AnalysisResult",
+    "Diagnostic",
     "compile",
     "compile_program",
     "program_cache_info",

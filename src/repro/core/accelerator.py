@@ -36,6 +36,7 @@ pipeline.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -363,21 +364,18 @@ def _kernel_plan(module, kern, compiled, mode, compile_time_s, shape) -> KernelP
     flops = bytes_accessed = None
     arg_bytes = out_bytes = temp_bytes = None
     if compiled is not None:
-        try:
+        # cost/memory analyses are backend-optional: absent -> static fallback
+        with contextlib.suppress(Exception):
             cost = compiled.cost_analysis()
             entry = cost[0] if isinstance(cost, (list, tuple)) else cost
             if entry:
                 flops = float(entry.get("flops", 0.0)) or None
                 bytes_accessed = float(entry.get("bytes accessed", 0.0)) or None
-        except Exception:
-            pass
-        try:
+        with contextlib.suppress(Exception):
             m = compiled.memory_analysis()
             arg_bytes = int(m.argument_size_in_bytes)
             out_bytes = int(m.output_size_in_bytes)
             temp_bytes = int(m.temp_size_in_bytes)
-        except Exception:
-            pass
     if flops is None:
         # static fallback: one op-estimate per streamed lane per access
         lanes = shape.n_edges if kern.kind is mir.KernelKind.EDGE else shape.n_vertices
@@ -413,6 +411,9 @@ class AcceleratorReport:
     live_buffer_peak_bytes: int  # resident state+plan+worst kernel temps
     lower_time_s: float
     pass_report: Tuple[str, ...] = ()
+    #: determinism certificate from repro.analysis (deterministic /
+    #: reduction-deterministic / racy) — also stored in artifact manifests
+    determinism: str = "unknown"
 
     @property
     def total_flops_per_launch_set(self) -> float:
@@ -427,6 +428,7 @@ class AcceleratorReport:
             f"  lowered in {self.lower_time_s:.3f}s "
             f"({sum(1 for k in self.kernels if k.mode.startswith('aot'))}"
             f"/{len(self.kernels)} kernels AOT)",
+            f"  determinism: {self.determinism}",
         ]
         for k in self.kernels:
             extra = f" = {' -> '.join(k.stages)}" if k.stages else ""
@@ -550,7 +552,13 @@ class Accelerator:
             state_bytes=state_bytes, gb_bytes=gb_bytes,
             live_buffer_peak_bytes=peak, lower_time_s=self.lower_time_s,
             pass_report=tuple(module.pass_report),
+            determinism=self._determinism(),
         )
+
+    def _determinism(self) -> str:
+        from ..analysis import determinism_certificate
+
+        return determinism_certificate(self.program.module)
 
     def __repr__(self) -> str:
         return (
@@ -657,6 +665,7 @@ class Accelerator:
                 "target_overrides": [list(o) for o in opts.target_overrides],
             },
             "pass_report": list(self.program.module.pass_report),
+            "determinism": self._determinism(),
             "kernels": kernels_manifest,
         }
         with open(os.path.join(path, "program.gt"), "w") as f:
@@ -707,22 +716,19 @@ def load_or_lower(program: "Program", target: Target, shape: GraphShape,
     key = accelerator_fingerprint(program.fingerprint, target, shape)
     path = os.path.join(artifact_dir, key[:24])
     if os.path.isdir(path):
-        try:
+        # corrupt/stale content at a matching path: a tampered manifest
+        # or truncated source raises anything from AcceleratorError to
+        # ProgramError/ValueError — every load failure means re-lower
+        with contextlib.suppress(Exception):
             t0 = time.perf_counter()
             acc = load_accelerator(path)
             return acc, True, time.perf_counter() - t0
-        except Exception:
-            # corrupt/stale content at a matching path: a tampered manifest
-            # or truncated source raises anything from AcceleratorError to
-            # ProgramError/ValueError — every load failure means re-lower
-            pass
     t0 = time.perf_counter()
     acc = Accelerator(program, target, shape)
     dt = time.perf_counter() - t0
-    try:
+    # artifact store not writable: cold result is still valid
+    with contextlib.suppress(OSError):
         acc.save(path)
-    except OSError:
-        pass  # artifact store not writable: cold result is still valid
     return acc, False, dt
 
 
@@ -773,11 +779,10 @@ def load_accelerator(path: str) -> Accelerator:
         for name, entry in manifest.get("kernels", {}).items():
             rel = entry.get("executable")
             if rel:
-                try:
-                    with open(os.path.join(path, rel), "rb") as f:
-                        blobs[name] = f.read()
-                except OSError:
-                    pass  # re-lower this kernel
+                # unreadable blob: re-lower this kernel
+                with contextlib.suppress(OSError), \
+                        open(os.path.join(path, rel), "rb") as f:
+                    blobs[name] = f.read()
     target = Target.from_dict(manifest["target"])
     shape = GraphShape(**manifest["shape"])
     return Accelerator(program, target, shape, _blobs=blobs or None)

@@ -96,6 +96,20 @@ def apply_scatter(
     n = prop_arr.shape[0]
     vals = vals.astype(prop_arr.dtype) if vals.dtype != prop_arr.dtype else vals
     if op is None:
+        if options.shuffle:
+            # Deterministic last-write-wins: XLA leaves duplicate-index
+            # .set() order unspecified, so under the shuffle substrate we
+            # resolve each slot to the LAST writing edge in stream order —
+            # the answer a sequential interpretation of the kernel gives.
+            # (This is the commit path the GT101 race analysis forces on.)
+            n_lanes = idx.shape[0]
+            pos = jnp.arange(n_lanes, dtype=jnp.int32)
+            if mask is not None:
+                pos = jnp.where(mask, pos, -1)
+            last = jax.ops.segment_max(pos, idx, n)
+            written = last >= 0
+            chosen = vals[jnp.clip(last, 0, max(n_lanes - 1, 0))]
+            return jnp.where(written, chosen, prop_arr)
         # plain scatter store: mask by re-storing the original value
         if mask is not None:
             old = prop_arr[idx]

@@ -145,6 +145,19 @@ class Engine:
         # the execution substrate: an explicit Target (Accelerator path) or
         # one resolved from the legacy CompileOptions substrate fields
         self.target = target if target is not None else Target.from_options(options)
+        # Race-safety override: a program whose static analysis found a true
+        # scatter race (GT101) is only sequentially-correct under the sorted
+        # shuffle substrate — disabling shuffle on it is an ablation of
+        # correctness, not of performance, so the analysis verdict wins.
+        self.shuffle_forced = False
+        if not self.target.shuffle:
+            from ..analysis.analyses import needs_shuffle
+
+            if needs_shuffle(module):
+                import dataclasses as _dc
+
+                self.target = _dc.replace(self.target, shuffle=True)
+                self.shuffle_forced = True
         self.argv = argv or []
         self.stats = EngineStats()
         # AOT kernel library (repro.core.accelerator): shape-generic lowered

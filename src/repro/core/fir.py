@@ -113,9 +113,12 @@ BOOL = ScalarType("bool")
 
 @dataclass
 class Node:
-    """Base FIR node: every node carries its source line for diagnostics."""
+    """Base FIR node: every node carries its source line/column for
+    diagnostics. Both fields are ``compare=False`` and ignored by
+    :func:`dump`, so provenance never perturbs MIR fingerprints."""
 
     line: int = field(default=0, compare=False)
+    col: int = field(default=0, compare=False)
 
 
 @dataclass

@@ -74,7 +74,7 @@ class Parser:
         t = self.expect("kw", "element")
         name = self.expect("ident").text
         self.expect("kw", "end")
-        return fir.ElementDecl(line=t.line, name=name)
+        return fir.ElementDecl(line=t.line, col=t.col, name=name)
 
     def parse_const(self) -> fir.ConstDecl:
         t = self.expect("kw", "const")
@@ -85,7 +85,7 @@ class Parser:
         if self.accept("op", "="):
             init = self.parse_expr()
         self.expect("op", ";")
-        return fir.ConstDecl(line=t.line, name=name, type=ty, init=init)
+        return fir.ConstDecl(line=t.line, col=t.col, name=name, type=ty, init=init)
 
     # -- types ---------------------------------------------------------------
     def parse_type(self) -> fir.Type:
@@ -146,7 +146,7 @@ class Parser:
         self.expect("op", ")")
         body = self.parse_block()
         self.expect("kw", "end")
-        return fir.FuncDecl(line=t.line, name=name, params=params, body=body)
+        return fir.FuncDecl(line=t.line, col=t.col, name=name, params=params, body=body)
 
     def parse_block(self, until=("end", "else")) -> List[fir.Stmt]:
         stmts: List[fir.Stmt] = []
@@ -166,7 +166,7 @@ class Parser:
             if self.accept("op", "="):
                 init = self.parse_expr()
             self.expect("op", ";")
-            return fir.VarDecl(line=t.line, name=name, type=ty, init=init)
+            return fir.VarDecl(line=t.line, col=t.col, name=name, type=ty, init=init)
         if self.at("kw", "if"):
             self.next()
             self.expect("op", "(")
@@ -177,7 +177,7 @@ class Parser:
             if self.accept("kw", "else"):
                 else_body = self.parse_block(until=("end",))
             self.expect("kw", "end")
-            return fir.If(line=t.line, cond=cond, then_body=then_body, else_body=else_body)
+            return fir.If(line=t.line, col=t.col, cond=cond, then_body=then_body, else_body=else_body)
         if self.at("kw", "while"):
             self.next()
             self.expect("op", "(")
@@ -185,7 +185,7 @@ class Parser:
             self.expect("op", ")")
             body = self.parse_block(until=("end",))
             self.expect("kw", "end")
-            return fir.While(line=t.line, cond=cond, body=body)
+            return fir.While(line=t.line, col=t.col, cond=cond, body=body)
         if self.at("kw", "for"):
             self.next()
             var = self.expect("ident").text
@@ -193,7 +193,7 @@ class Parser:
             it = self.parse_expr()
             body = self.parse_block(until=("end",))
             self.expect("kw", "end")
-            return fir.For(line=t.line, var=var, iter=it, body=body)
+            return fir.For(line=t.line, col=t.col, var=var, iter=it, body=body)
         # expression-leading statements: assign / reduce-assign / call
         expr = self.parse_expr()
         if self.at("op", "="):
@@ -202,7 +202,7 @@ class Parser:
             self.expect("op", ";")
             if not isinstance(expr, (fir.Ident, fir.Index)):
                 raise _err("invalid assignment target", t)
-            return fir.Assign(line=t.line, target=expr, value=value)
+            return fir.Assign(line=t.line, col=t.col, target=expr, value=value)
         for op_tok, op in (("min=", "min"), ("max=", "max"), ("+=", "+"), ("-=", "-"), ("*=", "*")):
             if self.at("op", op_tok):
                 self.next()
@@ -210,9 +210,9 @@ class Parser:
                 self.expect("op", ";")
                 if not isinstance(expr, (fir.Ident, fir.Index)):
                     raise _err("invalid reduce target", t)
-                return fir.ReduceAssign(line=t.line, target=expr, op=op, value=value)
+                return fir.ReduceAssign(line=t.line, col=t.col, target=expr, op=op, value=value)
         self.expect("op", ";")
-        return fir.ExprStmt(line=t.line, expr=expr)
+        return fir.ExprStmt(line=t.line, col=t.col, expr=expr)
 
     # -- expressions ------------------------------------------------------------
     def parse_expr(self) -> fir.Expr:
@@ -222,14 +222,14 @@ class Parser:
         e = self.parse_and()
         while self.at("op", "|"):
             t = self.next()
-            e = fir.BinOp(line=t.line, op="|", lhs=e, rhs=self.parse_and())
+            e = fir.BinOp(line=t.line, col=t.col, op="|", lhs=e, rhs=self.parse_and())
         return e
 
     def parse_and(self) -> fir.Expr:
         e = self.parse_cmp()
         while self.at("op", "&"):
             t = self.next()
-            e = fir.BinOp(line=t.line, op="&", lhs=e, rhs=self.parse_cmp())
+            e = fir.BinOp(line=t.line, col=t.col, op="&", lhs=e, rhs=self.parse_cmp())
         return e
 
     def parse_cmp(self) -> fir.Expr:
@@ -237,27 +237,27 @@ class Parser:
         for op in ("==", "!=", "<=", ">=", "<", ">"):
             if self.at("op", op):
                 t = self.next()
-                return fir.BinOp(line=t.line, op=op, lhs=e, rhs=self.parse_add())
+                return fir.BinOp(line=t.line, col=t.col, op=op, lhs=e, rhs=self.parse_add())
         return e
 
     def parse_add(self) -> fir.Expr:
         e = self.parse_mul()
         while self.at("op", "+") or self.at("op", "-"):
             t = self.next()
-            e = fir.BinOp(line=t.line, op=t.text, lhs=e, rhs=self.parse_mul())
+            e = fir.BinOp(line=t.line, col=t.col, op=t.text, lhs=e, rhs=self.parse_mul())
         return e
 
     def parse_mul(self) -> fir.Expr:
         e = self.parse_unary()
         while self.at("op", "*") or self.at("op", "/"):
             t = self.next()
-            e = fir.BinOp(line=t.line, op=t.text, lhs=e, rhs=self.parse_unary())
+            e = fir.BinOp(line=t.line, col=t.col, op=t.text, lhs=e, rhs=self.parse_unary())
         return e
 
     def parse_unary(self) -> fir.Expr:
         if self.at("op", "-") or self.at("op", "!"):
             t = self.next()
-            return fir.UnaryOp(line=t.line, op=t.text, operand=self.parse_unary())
+            return fir.UnaryOp(line=t.line, col=t.col, op=t.text, operand=self.parse_unary())
         return self.parse_postfix()
 
     def parse_postfix(self) -> fir.Expr:
@@ -269,12 +269,12 @@ class Parser:
                 self.expect("op", "(")
                 args = self.parse_args()
                 self.expect("op", ")")
-                e = fir.MethodCall(line=t.line, obj=e, method=method, args=args)
+                e = fir.MethodCall(line=t.line, col=t.col, obj=e, method=method, args=args)
             elif self.at("op", "["):
                 t = self.next()
                 idx = self.parse_expr()
                 self.expect("op", "]")
-                e = fir.Index(line=t.line, base=e, index=idx)
+                e = fir.Index(line=t.line, col=t.col, base=e, index=idx)
             else:
                 return e
 
@@ -291,24 +291,24 @@ class Parser:
         t = self.peek()
         if t.kind == "int":
             self.next()
-            return fir.IntLit(line=t.line, value=int(t.text))
+            return fir.IntLit(line=t.line, col=t.col, value=int(t.text))
         if t.kind == "float":
             self.next()
-            return fir.FloatLit(line=t.line, value=float(t.text))
+            return fir.FloatLit(line=t.line, col=t.col, value=float(t.text))
         if t.kind == "string":
             self.next()
-            return fir.StrLit(line=t.line, value=t.text)
+            return fir.StrLit(line=t.line, col=t.col, value=t.text)
         if self.at("kw", "true") or self.at("kw", "false"):
             self.next()
-            return fir.BoolLit(line=t.line, value=t.text == "true")
+            return fir.BoolLit(line=t.line, col=t.col, value=t.text == "true")
         if t.kind == "ident":
             self.next()
             if self.at("op", "("):
                 self.next()
                 args = self.parse_args()
                 self.expect("op", ")")
-                return fir.Call(line=t.line, func=t.text, args=args)
-            return fir.Ident(line=t.line, name=t.text)
+                return fir.Call(line=t.line, col=t.col, func=t.text, args=args)
+            return fir.Ident(line=t.line, col=t.col, name=t.text)
         if self.accept("op", "("):
             e = self.parse_expr()
             self.expect("op", ")")

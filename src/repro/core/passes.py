@@ -555,9 +555,9 @@ def pass_dce(ctx: PassContext) -> None:
         # write targets (write-only properties are observable results) and
         # bare idents (`swap(a, b)`)
         def host_prop_visit(e):
-            if isinstance(e, fir.Index) and isinstance(e.base, fir.Ident):
-                if e.base.name in module.properties:
-                    used_props.add(e.base.name)
+            if (isinstance(e, fir.Index) and isinstance(e.base, fir.Ident)
+                    and e.base.name in module.properties):
+                used_props.add(e.base.name)
             if isinstance(e, fir.Ident) and e.name in module.properties:
                 used_props.add(e.name)
 

@@ -46,6 +46,7 @@ Migration between the two front-ends is mechanical; see the
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import numbers
 import threading
@@ -115,7 +116,8 @@ class ParamSpec:
 
 def _coerce_param(spec: ParamSpec, value: Any):
     """Validate + coerce one user-supplied parameter to its declared type."""
-    try:
+    # multi-element arrays raise on the ambiguous comparisons -> mismatch
+    with contextlib.suppress(TypeError, ValueError):
         if spec.scalar == "bool":
             if isinstance(value, (bool,)) or value in (0, 1):
                 return bool(value)
@@ -126,11 +128,9 @@ def _coerce_param(spec: ParamSpec, value: Any):
                 return int(value)
             if isinstance(value, numbers.Real) and float(value).is_integer():
                 return int(value)
-        elif spec.scalar == "float":
-            if isinstance(value, numbers.Real) and not isinstance(value, bool):
-                return float(value)
-    except (TypeError, ValueError):
-        pass  # e.g. multi-element arrays: ambiguous comparisons -> mismatch
+        elif (spec.scalar == "float" and isinstance(value, numbers.Real)
+              and not isinstance(value, bool)):
+            return float(value)
     raise ProgramError(
         f"parameter {spec.name!r} expects {spec.scalar}, got "
         f"{type(value).__name__} ({value!r})"
@@ -188,6 +188,30 @@ class Program:
     def describe(self) -> str:
         """Textual MIR dump (the analogue of the generated-OpenCL listing)."""
         return self.module.describe()
+
+    def diagnostics(self, shape=None):
+        """Static-analysis findings over this program's (optimized) module.
+
+        Returns an :class:`repro.analysis.AnalysisResult`. The shape-free
+        result is computed once and cached on the Program; pass a
+        :class:`~repro.core.accelerator.GraphShape` to additionally run the
+        dtype/overflow analyses (GT5xx, computed fresh per shape).
+
+        Provenance note: the text and embedded front-ends share one cached
+        module per MIR fingerprint, so line numbers here belong to
+        whichever twin was analyzed first. For provenance guaranteed to
+        match a specific source, call ``repro.analyze(src)`` on that
+        source directly.
+        """
+        from ..analysis import analyze
+
+        if shape is not None:
+            return analyze(self, shape=shape)
+        cached = getattr(self, "_analysis", None)
+        if cached is None:
+            cached = analyze(self)
+            self._analysis = cached
+        return cached
 
     def __repr__(self) -> str:
         return (
@@ -465,15 +489,14 @@ def _analyze_embedded(gp: "GraphProgram") -> Tuple[mir.Module, str, str]:
     mir_key = mir.fingerprint(module)
     with _CACHE_LOCK:
         module = _MODULE_CACHE.setdefault(mir_key, module)
-    try:
+    with contextlib.suppress(AttributeError):  # exotic duck types
         gp._identity = (mir_key, source_text)
-    except AttributeError:  # pragma: no cover - exotic duck types
-        pass
     return module, mir_key, source_text
 
 
 def compile_program(
-    src: "str | GraphProgram", options: Optional[CompileOptions] = None
+    src: "str | GraphProgram", options: Optional[CompileOptions] = None,
+    *, strict: bool = False,
 ) -> Program:
     """Compile DSL source — text or embedded — into a :class:`Program`.
 
@@ -482,6 +505,13 @@ def compile_program(
     of the canonical serialized MIR plus the options: the same program
     always returns the same artifact no matter which front-end authored
     it, and different options recompile.
+
+    ``strict=True`` additionally runs the static-analysis framework
+    (:mod:`repro.analysis`) over the source: error-level diagnostics
+    (e.g. GT101 scatter races) raise :class:`ProgramError` with full
+    provenance, warnings collect silently on the returned Program
+    (``program.diagnostics()``). Strictness is not part of the cache key —
+    it gates raising, not the compiled artifact.
     """
     if isinstance(src, str):
         module, mir_key = _analyze_text(src)
@@ -497,6 +527,8 @@ def compile_program(
     with _CACHE_LOCK:
         prog = _PROGRAM_CACHE.get(key)
     if prog is not None:
+        if strict:
+            _check_strict(src, opts)
         return prog
     # the MIR optimization pipeline (CompileOptions.passes) specializes the
     # options-independent base module per option set; it works on a copy,
@@ -505,7 +537,30 @@ def compile_program(
     prog = Program(optimized, opts, key, source_text)
     with _CACHE_LOCK:
         prog = _PROGRAM_CACHE.setdefault(key, prog)
+    if strict:
+        _check_strict(src, opts)
     return prog
+
+
+def _check_strict(src, opts: CompileOptions) -> None:
+    """Raise ProgramError on error-level analysis findings.
+
+    Re-runs the front-end via ``repro.analyze`` so the provenance in the
+    raised message is faithful to THIS input (caret excerpts for text,
+    Python file:lineno for embedded) — the shared module cache may hold
+    the other twin's line numbers.
+    """
+    from ..analysis import analyze as _analyze
+
+    result = _analyze(src, options=opts)
+    if result.errors:
+        first = result.errors[0]
+        detail = "\n".join(d.format() for d in result.errors)
+        raise ProgramError(
+            f"strict compile rejected the program "
+            f"({len(result.errors)} error-level diagnostic(s)):\n{detail}",
+            first.line, first.col,
+        )
 
 
 # `repro.compile(src, options)` reads naturally at call sites; the builtin

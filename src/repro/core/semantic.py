@@ -28,20 +28,23 @@ HOST_BUILTINS = {"load": None, "swap": 2, "print": None, "argv": None}
 
 
 class SemanticError(Exception):
-    """Semantic error carrying the 1-based source ``line`` of the offending
-    FIR node (column information is not tracked past the parser). For
-    programs built by the embedded front-end the line is the Python line
-    number of the offending decorated-function statement."""
+    """Semantic error carrying the 1-based source ``line``/``col`` of the
+    offending FIR node (the parser threads both through every node it
+    builds). For programs built by the embedded front-end the line is the
+    Python line number of the offending decorated-function statement and
+    ``col`` is 0 (Python ASTs are lowered per-statement, not per-token)."""
 
-    def __init__(self, msg: str, line: int = 0):
+    def __init__(self, msg: str, line: int = 0, col: int = 0):
         super().__init__(msg)
         self.line = line
+        self.col = col
 
 
 def _serr(msg: str, node) -> SemanticError:
     line = getattr(node, "line", 0) or 0
+    col = getattr(node, "col", 0) or 0
     prefix = f"line {line}: " if line else ""
-    return SemanticError(prefix + msg, line)
+    return SemanticError(prefix + msg, line, col)
 
 
 def _index_pattern(idx: fir.Expr, k: mir.Kernel, loop_vars: Set[str]) -> mir.IndexPattern:
@@ -217,7 +220,8 @@ class Analyzer:
                             and same_index(lhs.index, tgt.index)
                         ):
                             body[i] = fir.ReduceAssign(
-                                line=st.line, target=tgt, op=v.op, value=rhs
+                                line=st.line, col=st.col, target=tgt,
+                                op=v.op, value=rhs,
                             )
                             break
 
@@ -261,7 +265,7 @@ class Analyzer:
                 for a in e.args:
                     walk_expr(a)
 
-        def record_write(target: fir.Expr, op: Optional[str], line: int):
+        def record_write(target: fir.Expr, op: Optional[str], st: fir.Stmt):
             if isinstance(target, fir.Index) and isinstance(target.base, fir.Ident):
                 name = target.base.name
                 if name in props:
@@ -276,15 +280,15 @@ class Analyzer:
                     k.writes_weight = True
                     return
                 return  # local variable
-            raise SemanticError(f"line {line}: unsupported write target", line)
+            raise _serr("unsupported write target", st)
 
         def walk_stmts(body: List[fir.Stmt]):
             for st in body:
                 if isinstance(st, fir.Assign):
-                    record_write(st.target, None, st.line)
+                    record_write(st.target, None, st)
                     walk_expr(st.value)
                 elif isinstance(st, fir.ReduceAssign):
-                    record_write(st.target, st.op, st.line)
+                    record_write(st.target, st.op, st)
                     walk_expr(st.value)
                 elif isinstance(st, fir.VarDecl):
                     walk_expr(st.init)

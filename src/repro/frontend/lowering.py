@@ -37,6 +37,7 @@ inlined as literals — host-language parameterization for free.
 from __future__ import annotations
 
 import ast
+import contextlib
 import inspect
 import textwrap
 from typing import List, Optional, Sequence, Tuple
@@ -114,10 +115,8 @@ def capture_env(fn) -> dict:
     env = dict(fn.__globals__)
     if fn.__closure__:
         for name, cell in zip(fn.__code__.co_freevars, fn.__closure__):
-            try:
+            with contextlib.suppress(ValueError):  # still-empty cell
                 env[name] = cell.cell_contents
-            except ValueError:  # pragma: no cover - still-empty cell
-                pass
     return env
 
 

@@ -54,7 +54,7 @@ def generate(model: Model, params, prompts: jnp.ndarray, gen_len: int,
     out = []
     key = jax.random.PRNGKey(seed)
     tok = None
-    for t in range(gen_len):
+    for _t in range(gen_len):
         if greedy:
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         else:
@@ -153,6 +153,10 @@ def serve_graph(args) -> int:
         print(f"dynamic batching: {b['batches']} batches for {b['queries']} "
               f"queries, occupancy {b['occupancy']:.0%} of "
               f"max_batch={b['max_batch']}")
+    rejected = stats["queries"]["rejections_analysis"]
+    if rejected:
+        print(f"admission control: {rejected} submission(s) rejected by "
+              f"static analysis (see per-tenant rejections_analysis)")
     print(f"first result ({result_prop}): min={sample.min():.4g} "
           f"max={sample.max():.4g}")
     print("service stats snapshot:")

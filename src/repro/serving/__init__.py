@@ -26,6 +26,7 @@ from .scheduler import (
 from .service import (
     GraphService,
     NAMED_ALGORITHMS,
+    ProgramRejected,
     default_service,
     reset_default_service,
     run,
@@ -39,6 +40,7 @@ __all__ = [
     "LatencyHistogram",
     "NAMED_ALGORITHMS",
     "Overloaded",
+    "ProgramRejected",
     "RequestScheduler",
     "ResidentEntry",
     "ServeMetrics",

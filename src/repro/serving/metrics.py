@@ -101,7 +101,8 @@ class _Group:
 
     __slots__ = (
         "submitted", "completed", "errors", "rejected_overloaded",
-        "rejected_deadline", "deadline_misses", "latency",
+        "rejected_deadline", "rejections_analysis", "deadline_misses",
+        "latency",
     )
 
     def __init__(self) -> None:
@@ -110,6 +111,7 @@ class _Group:
         self.errors = 0
         self.rejected_overloaded = 0
         self.rejected_deadline = 0
+        self.rejections_analysis = 0
         self.deadline_misses = 0
         self.latency = LatencyHistogram()
 
@@ -120,6 +122,7 @@ class _Group:
             "errors": self.errors,
             "rejected_overloaded": self.rejected_overloaded,
             "rejected_deadline": self.rejected_deadline,
+            "rejections_analysis": self.rejections_analysis,
             "deadline_misses": self.deadline_misses,
             "latency_ms": self.latency.snapshot(),
         }
@@ -165,11 +168,13 @@ class ServeMetrics:
                 g.submitted += 1
 
     def rejected(self, tenant: str, label: str, kind: str) -> None:
-        """kind: 'overloaded' (queue full) | 'deadline' (expired in queue)."""
-        field = (
-            "rejected_overloaded" if kind == "overloaded"
-            else "rejected_deadline"
-        )
+        """kind: 'overloaded' (queue full) | 'deadline' (expired in queue)
+        | 'analysis' (static analysis rejected the program at admission)."""
+        field = {
+            "overloaded": "rejected_overloaded",
+            "deadline": "rejected_deadline",
+            "analysis": "rejections_analysis",
+        }.get(kind, "rejected_deadline")
         with self._lock:
             for g in self._groups(tenant, label):
                 setattr(g, field, getattr(g, field) + 1)

@@ -35,6 +35,7 @@ Three serving-grade behaviors distinguish this from bare
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import threading
 import time
@@ -296,14 +297,13 @@ class ArtifactRegistry:
             self.lowerings += 1
         self.metrics.registry_event("cold_lowerings")
         if path:
-            try:
+            # unwritable store: cold result is still valid
+            with contextlib.suppress(OSError):
                 acc.save(path)
                 with self._lock:
                     # the path holds known-good content again: let the
                     # next process warm-start from it
                     self._negative.pop(acc_key, None)
-            except OSError:
-                pass  # unwritable store: cold result is still valid
         return acc
 
     def _accelerator_for(self, program, target: Target,

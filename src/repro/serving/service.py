@@ -32,9 +32,30 @@ from ..core.session import ServiceClosed
 from ..core.target import Target
 from .metrics import ServeMetrics
 from .registry import ArtifactRegistry, default_artifact_dir
-from .scheduler import RequestScheduler
+from .scheduler import RequestScheduler, ServingError
 
-__all__ = ["GraphService", "serve", "run", "NAMED_ALGORITHMS"]
+__all__ = ["GraphService", "ProgramRejected", "serve", "run", "NAMED_ALGORITHMS"]
+
+
+class ProgramRejected(ServingError):
+    """Static analysis found error-level diagnostics at admission.
+
+    Raised by :meth:`GraphService.submit` *before* the program reaches the
+    scheduler or registry — a racy or otherwise broken program never
+    occupies queue or artifact capacity. ``diagnostics`` carries the
+    error-level :class:`~repro.analysis.Diagnostic` objects.
+    """
+
+    def __init__(self, label: str, diagnostics) -> None:
+        self.label = label
+        self.diagnostics = tuple(diagnostics)
+        detail = "; ".join(
+            f"{d.code} {d.message.splitlines()[0]}" for d in self.diagnostics
+        )
+        super().__init__(
+            f"program {label!r} rejected by static analysis "
+            f"({len(self.diagnostics)} error(s)): {detail}"
+        )
 
 
 def _named_algorithms() -> Dict[str, str]:
@@ -169,12 +190,19 @@ class GraphService:
         """Async: admit one query, get a Future.
 
         Raises :class:`~repro.serving.scheduler.Overloaded` when the
-        tenant's queue is full and :class:`ServiceClosed` after
-        :meth:`close`; parameter validation fails fast on the caller.
+        tenant's queue is full, :class:`ProgramRejected` when static
+        analysis finds error-level diagnostics (counted per-tenant as
+        ``rejections_analysis`` in :meth:`stats`), and
+        :class:`ServiceClosed` after :meth:`close`; parameter validation
+        fails fast on the caller.
         """
         if self._closed:
             raise ServiceClosed("GraphService is closed")
         program, label = self._resolve_program(program_or_name)
+        analysis = program.diagnostics()
+        if analysis.errors:
+            self.metrics.rejected(tenant, label, "analysis")
+            raise ProgramRejected(label, analysis.errors)
         coerced = program.validate_params(params)
         target = self._target_for(program)
         job = (program, graph, target)

@@ -1,0 +1,429 @@
+"""Static analysis framework: repro.analyze + lint + admission gates.
+
+Acceptance criteria of the static-analysis PR:
+
+* all 8 built-in algorithms lint clean (0 errors, 0 warnings) with the
+  expected determinism certificates;
+* a deliberately racy edge kernel (plain ``=`` scatter to ``P[dst]``) is
+  flagged GT101 with correct provenance on BOTH front-ends — a caret
+  excerpt into the ``.gt`` text, ``file.py:lineno`` for the embedded
+  twin — and the diagnostic *codes* are identical across front-ends
+  (the parity matrix);
+* ``repro.compile(src, strict=True)`` raises :class:`ProgramError` on
+  error-level diagnostics (on the fresh AND the cache-hit path);
+  ``GraphService.submit`` rejects with typed :class:`ProgramRejected`
+  before registry admission and counts ``rejections_analysis`` per
+  tenant;
+* the GT101 verdict feeds execution: an Engine over a racy module forces
+  the shuffle substrate back on even under ``CompileOptions.baseline()``,
+  and the deterministic last-write-wins scatter path matches sequential
+  edge-order semantics;
+* ``accelerator.report()`` and saved artifact manifests carry the
+  determinism certificate;
+* GT3xx/GT4xx/GT5xx dataflow analyses fire on targeted programs and stay
+  quiet on the shipped algorithms;
+* ``python -m repro.lint`` exits 0/1 and emits well-formed ``--json``.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro
+from repro import analysis
+from repro.algorithms import sources
+from repro.algorithms.embedded import BFS_ECP_EMBEDDED, PAGERANK_EMBEDDED
+from repro.core.accelerator import GraphShape
+from repro.frontend import GraphProgram
+from repro.graph.storage import GraphData
+
+
+RACY_GT = """
+element Vertex end
+const edges: edgeset{Vertex}(Vertex, Vertex) = load(argv(1));
+const vertices: vertexset{Vertex};
+const P: vector{Vertex}(int);
+func initP(v: Vertex)
+    P[v] = 0;
+end
+func upd(src: Vertex, dst: Vertex)
+    P[dst] = P[src] + 1;
+end
+func main()
+    vertices.init(initP);
+    edges.process(upd);
+end
+"""
+
+
+def build_racy_embedded() -> GraphProgram:
+    """The embedded twin of RACY_GT (same kernels, same race)."""
+    g = GraphProgram("racy_twin")
+    edges = g.edgeset("edges")
+    vertices = g.vertexset("vertices")
+    P = g.vertex_prop("P", int)
+
+    @g.vertex_kernel
+    def initP(v):
+        P[v] = 0
+
+    @g.edge_kernel
+    def upd(src, dst):
+        P[dst] = P[src] + 1
+
+    @g.main
+    def main():
+        vertices.init(initP)
+        edges.process(upd)
+
+    return g
+
+
+def tiny_graph() -> GraphData:
+    return GraphData(4, src=[0, 1, 2, 0], dst=[1, 2, 0, 2])
+
+
+# ---------------------------------------------------------------------------
+# built-in algorithms: all clean, expected certificates
+# ---------------------------------------------------------------------------
+
+EXPECTED_CERTS = {
+    "BFS_ECP": analysis.DETERMINISTIC,
+    "BFS_HYBRID": analysis.DETERMINISTIC,
+    "SSSP": analysis.DETERMINISTIC,
+    "WCC": analysis.DETERMINISTIC,
+    "KCORE": analysis.DETERMINISTIC,
+    "PAGERANK": analysis.REDUCTION_DETERMINISTIC,
+    "PPR": analysis.REDUCTION_DETERMINISTIC,
+    "CGAW": analysis.REDUCTION_DETERMINISTIC,
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED_CERTS))
+def test_builtin_algorithm_lints_clean(name):
+    res = analysis.analyze(getattr(sources, name))
+    assert res.errors == (), [d.format() for d in res.errors]
+    assert res.warnings == (), [d.format() for d in res.warnings]
+    assert res.certificate == EXPECTED_CERTS[name]
+    # the certificate + incremental verdict always ride along as infos
+    codes = res.codes()
+    assert "GT201" in codes and "GT202" in codes
+
+
+def test_builtins_never_need_forced_shuffle():
+    from repro.core.program import compile_program
+
+    for name in EXPECTED_CERTS:
+        prog = compile_program(getattr(sources, name))
+        assert not analysis.needs_shuffle(prog.module), name
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix: same codes on both front-ends, provenance differs
+# ---------------------------------------------------------------------------
+
+
+def test_racy_parity_codes_match_across_front_ends():
+    text = analysis.analyze(RACY_GT)
+    emb = analysis.analyze(build_racy_embedded())
+    assert text.codes() == emb.codes()
+    assert "GT101" in text.codes()
+    assert text.certificate == emb.certificate == analysis.RACY
+
+
+def test_racy_text_provenance_is_caret_excerpt():
+    res = analysis.analyze(RACY_GT)
+    (err,) = res.errors
+    assert err.code == "GT101"
+    assert err.kernel == "upd" and err.prop == "P"
+    # the caret excerpt quotes the racy line of the .gt text
+    assert "P[dst] = P[src] + 1;" in err.location
+    assert "^" in err.location
+    assert err.line == RACY_GT.splitlines().index(
+        "    P[dst] = P[src] + 1;") + 1
+
+
+def test_racy_embedded_provenance_is_python_file_lineno():
+    res = analysis.analyze(build_racy_embedded())
+    (err,) = res.errors
+    assert err.code == "GT101"
+    # rendered as this very file + the absolute lineno of the racy write
+    assert err.location.startswith(os.path.abspath(__file__).rsplit(os.sep, 1)[-1]) \
+        or __file__.rsplit(os.sep, 1)[-1] in err.location
+    assert err.location.endswith(f":{err.line}")
+    src_line = open(__file__).read().splitlines()[err.line - 1]
+    assert "P[dst] = P[src] + 1" in src_line
+
+
+def test_analyze_never_raises_on_broken_source():
+    res = analysis.analyze("func main( end")
+    assert not res.ok
+    assert res.certificate == "unknown"
+    assert res.errors[0].code in ("GT001", "GT002")
+
+
+def test_program_diagnostics_method():
+    prog = repro.compile(RACY_GT)
+    res = prog.diagnostics()
+    assert "GT101" in res.codes()
+    assert res.fingerprint == prog.fingerprint
+    # cached: same object on repeat calls
+    assert prog.diagnostics() is res
+
+
+# ---------------------------------------------------------------------------
+# strict compile + serving admission
+# ---------------------------------------------------------------------------
+
+
+def test_strict_compile_rejects_racy_program():
+    with pytest.raises(repro.ProgramError) as ei:
+        repro.compile(RACY_GT, strict=True)
+    assert "GT101" in str(ei.value)
+    # cache-hit path must reject too (non-strict compile primes the cache)
+    assert repro.compile(RACY_GT) is not None
+    with pytest.raises(repro.ProgramError):
+        repro.compile(RACY_GT, strict=True)
+    # strict passes a clean program through
+    assert repro.compile(sources.BFS_ECP, strict=True) is not None
+
+
+def test_service_submit_rejects_racy_both_front_ends():
+    g = tiny_graph()
+    with repro.serve(registry_dir=False) as svc:
+        for program in (RACY_GT, build_racy_embedded()):
+            with pytest.raises(repro.ProgramRejected) as ei:
+                svc.submit(program, g, tenant="alice")
+            assert [d.code for d in ei.value.diagnostics] == ["GT101"]
+        stats = svc.stats()
+        assert stats["tenants"]["alice"]["rejections_analysis"] == 2
+        assert stats["queries"]["rejections_analysis"] == 2
+        # a clean program on the same service still runs
+        res = svc.run("bfs", g, tenant="alice", root=0)
+        assert res is not None
+        assert stats["tenants"]["alice"]["rejected_overloaded"] == 0
+
+
+def test_program_rejected_is_typed_serving_error():
+    assert issubclass(repro.ProgramRejected, repro.ServingError)
+
+
+# ---------------------------------------------------------------------------
+# the verdict feeds execution: forced shuffle + deterministic stores
+# ---------------------------------------------------------------------------
+
+
+def test_engine_forces_shuffle_on_racy_module():
+    prog = repro.compile(RACY_GT, repro.CompileOptions.baseline())
+    sess = prog.bind(tiny_graph())
+    eng = sess.backend.engine
+    assert eng.shuffle_forced is True
+    assert eng.target.shuffle is True
+
+
+def test_engine_does_not_force_shuffle_on_clean_module():
+    prog = repro.compile(sources.BFS_ECP, repro.CompileOptions.baseline())
+    sess = prog.bind(tiny_graph())
+    eng = sess.backend.engine
+    assert eng.shuffle_forced is False
+    assert eng.target.shuffle is False
+
+
+def test_plain_scatter_is_last_write_wins_in_edge_order():
+    # under the deterministic path P[dst] must hold the LAST writing
+    # edge's value in CSR stream order (src-major), exactly like a
+    # sequential loop over the streamed edges. cache=False keeps vertex
+    # ids untranslated so the stored `src` values are directly readable.
+    src = """
+element Vertex end
+const edges: edgeset{Vertex}(Vertex, Vertex) = load(argv(1));
+const vertices: vertexset{Vertex};
+const P: vector{Vertex}(int);
+func initP(v: Vertex)
+    P[v] = -1;
+end
+func upd(src: Vertex, dst: Vertex)
+    P[dst] = src;
+end
+func main()
+    vertices.init(initP);
+    edges.process(upd);
+end
+"""
+    g = GraphData(4, src=[0, 1, 2, 0], dst=[2, 2, 0, 2])
+    prog = repro.compile(src)
+    res = prog.bind(g, target=repro.Target(cache=False)).run()
+    P = np.asarray(res.properties["P"])
+    # CSR stream order is [0->2, 0->2, 1->2, 2->0]: the last edge
+    # writing vertex 2 has src 1
+    assert P[2] == 1
+    assert P[0] == 2  # only edge (2->0) writes vertex 0
+    assert P[1] == -1  # never written, keeps its init
+    assert P[3] == -1
+
+
+# ---------------------------------------------------------------------------
+# dataflow analyses: GT3xx / GT4xx / GT5xx
+# ---------------------------------------------------------------------------
+
+NONTERM_GT = """
+element Vertex end
+const edges: edgeset{Vertex}(Vertex, Vertex) = load(argv(1));
+const vertices: vertexset{Vertex};
+const lvl: vector{Vertex}(int);
+const acc: vector{Vertex}(int);
+func init(v: Vertex)
+    lvl[v] = 0;
+end
+func relax(src: Vertex, dst: Vertex)
+    if (lvl[src] == 1)
+        acc[dst] min= lvl[src];
+    end
+end
+func main()
+    vertices.init(init);
+    var stuck: int = 1;
+    while (stuck > 0)
+        edges.process(relax);
+    end
+end
+"""
+
+
+def test_nontermination_heuristics_fire():
+    res = analysis.analyze(NONTERM_GT)
+    codes = res.codes()
+    assert "GT401" in codes  # `stuck` never written in the body
+    assert "GT402" in codes  # frontier props never updated in the loop
+    gt401 = [d for d in res.diagnostics if d.code == "GT401"]
+    assert "stuck" in gt401[0].message
+
+
+def test_frontier_loops_of_builtins_are_quiet():
+    for name in ("BFS_ECP", "BFS_HYBRID", "SSSP", "KCORE"):
+        res = analysis.analyze(getattr(sources, name))
+        assert "GT401" not in res.codes(), name
+        assert "GT402" not in res.codes(), name
+
+
+def test_uninit_read_and_dead_write():
+    src = """
+element Vertex end
+const edges: edgeset{Vertex}(Vertex, Vertex) = load(argv(1));
+const vertices: vertexset{Vertex};
+const seen: vector{Vertex}(int);
+const orphan: vector{Vertex}(int);
+func touch(v: Vertex)
+    orphan[v] = seen[v] + 1;
+end
+func main()
+    vertices.process(touch);
+end
+"""
+    res = analysis.analyze(src)
+    by_code = {d.code: d for d in res.diagnostics}
+    assert "GT301" in by_code and by_code["GT301"].prop == "seen"
+    assert "GT302" in by_code and by_code["GT302"].prop == "orphan"
+
+
+def test_shape_overflow_analyses():
+    small = GraphShape(n_vertices=100, n_edges=1000)
+    res = analysis.analyze(sources.PAGERANK, shape=small)
+    assert "GT501" not in res.codes() and "GT502" not in res.codes()
+
+    big = GraphShape(n_vertices=100, n_edges=2**31 - 1)
+    res = analysis.analyze(sources.KCORE, shape=big)
+    assert "GT501" in res.codes()  # int accumulators at |E| scale
+    assert "GT502" not in res.codes()  # |E| still fits int32
+
+    huge = GraphShape(n_vertices=100, n_edges=2**31)
+    res = analysis.analyze(sources.KCORE, shape=huge)
+    assert "GT502" in res.codes()
+    assert not res.ok  # GT502 is error-level
+
+
+def test_conflicting_reduce_ops_gt102():
+    src = """
+element Vertex end
+const edges: edgeset{Vertex}(Vertex, Vertex) = load(argv(1));
+const vertices: vertexset{Vertex};
+const P: vector{Vertex}(int);
+func initP(v: Vertex)
+    P[v] = 0;
+end
+func upd(src: Vertex, dst: Vertex)
+    P[dst] += 1;
+    P[dst] min= src;
+end
+func main()
+    vertices.init(initP);
+    edges.process(upd);
+end
+"""
+    res = analysis.analyze(src)
+    assert "GT102" in res.codes()
+    assert res.certificate == analysis.RACY
+
+
+# ---------------------------------------------------------------------------
+# accelerator surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_accelerator_report_and_manifest_carry_certificate(tmp_path):
+    prog = repro.compile(sources.PAGERANK)
+    acc = prog.lower(repro.Target(),
+                     shape=GraphShape(n_vertices=4, n_edges=4))
+    rep = acc.report()
+    assert rep.determinism == analysis.REDUCTION_DETERMINISTIC
+    assert "determinism: reduction-deterministic" in rep.describe()
+
+    path = acc.save(str(tmp_path / "pr"))
+    manifests = [f for f in os.listdir(path) if f.endswith(".json")]
+    with open(os.path.join(path, manifests[0])) as f:
+        manifest = json.load(f)
+    assert manifest["determinism"] == analysis.REDUCTION_DETERMINISTIC
+
+
+# ---------------------------------------------------------------------------
+# the lint CLI
+# ---------------------------------------------------------------------------
+
+
+def test_lint_cli_clean_and_racy(tmp_path, capsys):
+    from repro.lint import main
+
+    good = tmp_path / "good.gt"
+    good.write_text(sources.BFS_ECP)
+    racy = tmp_path / "racy.gt"
+    racy.write_text(RACY_GT)
+
+    assert main([str(good)]) == 0
+    assert main([str(good), str(racy)]) == 1
+    out = capsys.readouterr().out
+    assert "GT101" in out
+
+    assert main(["--json", str(racy)]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is False
+    (target,) = doc["targets"].values()
+    assert target["certificate"] == analysis.RACY
+    assert any(d["code"] == "GT101" for d in target["diagnostics"])
+
+
+def test_lint_cli_builtins_clean(capsys):
+    from repro.lint import main
+
+    assert main(["--json", "--builtins"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is True
+    # 8 text algorithms + the embedded twins
+    assert len(doc["targets"]) >= 10
+
+
+def test_lint_cli_module_spec(capsys):
+    from repro.lint import main
+
+    assert main(["repro.algorithms.sources:WCC"]) == 0
+    assert main(["tests.test_analysis:RACY_GT"]) == 1

@@ -79,7 +79,7 @@ def test_roundtrip_all_comparisons_and_boolops():
             flag[v] = 1
         if (val[v] <= 2) and (val[v] > -3) or (val[v] >= 7):
             flag[v] = 2
-        if not (val[v] == 4):
+        if not (val[v] == 4):  # noqa: SIM201 - exercises `not` lowering
             flag[v] = 3
 
     @p.main

@@ -238,10 +238,10 @@ def test_weighted_tenant_fairness():
         assert started.wait(timeout=10)
         futs = []
         # both queues full before the worker frees up
-        for i in range(8):
+        for _ in range(8):
             futs.append(sched.submit(
                 "q", {"tenant": "light"}, group_key="l", tenant="light"))
-        for i in range(8):
+        for _ in range(8):
             futs.append(sched.submit(
                 "q", {"tenant": "heavy"}, group_key="h", tenant="heavy"))
         release.set()
