@@ -17,7 +17,12 @@ Two modes:
   BFS + PPR + SSSP traffic across two weighted tenants through one
   ``repro.serve()`` service and gates per-tenant p99 latency against an
   SLO ceiling with zero dropped-below-deadline admissions and one
-  lowering per program.
+  lowering per program. A ``telemetry`` section (telemetry_overhead)
+  gates the tracing subsystem's cost: a fully traced warm BFS run must
+  stay within 1.05x of the untraced run, the disabled null tracer within
+  1.01x (measured as per-launch null-path cost scaled by the run's span
+  count), and the traced run's Chrome trace is exported to
+  ``BENCH_trace.json`` (uploaded as a CI artifact).
 
 * ``--check``: compares a freshly written ``BENCH_ci.json`` against the
   committed ``BENCH_baseline.json`` and exits non-zero when any workload's
@@ -344,6 +349,88 @@ def _time_serving():
     }
 
 
+def _time_telemetry():
+    """Tracing-overhead gate (telemetry_overhead): the telemetry subsystem
+    must be effectively free. Three measurements on one warm BFS session:
+
+    * **untraced**: best-of-5 warm runs with the default null tracer.
+    * **traced**: best-of-5 warm runs under ``repro.telemetry.enable()``
+      — full span capture (run + per-launch spans with frontier
+      occupancy attributes). Gated at <= 1.05x untraced (with the usual
+      absolute-delta jitter guard); the final traced run is exported as
+      a Chrome ``trace_event`` file (``BENCH_trace.json``, uploaded as a
+      CI artifact).
+    * **null path**: the disabled hot path is one tracer lookup plus an
+      ``enabled`` check per launch site — measured directly over 200k
+      iterations and scaled by the traced run's span count, it must
+      imply <= 1.01x overhead on the untraced wall time. Measuring the
+      per-op cost instead of differencing two noisy wall times keeps
+      this sub-percent gate deterministic.
+    """
+    import numpy as np
+
+    import repro
+    from repro import telemetry as tel
+    from repro.algorithms import sources
+    from repro.core.program import clear_program_cache
+    from repro.graph import generators
+
+    clear_program_cache()
+    tel.disable()
+    g = generators.power_law(2000, 16000, seed=0)
+    root = int(np.argmax(g.out_degree))
+    session = repro.compile(sources.BFS_ECP).bind(g)
+    session.run(root=root)  # warm: jit compilation out of the measurement
+
+    reps = 5
+    untraced_s = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        session.run(root=root)
+        untraced_s = min(untraced_s, time.perf_counter() - t0)
+
+    trace_path = os.environ.get("REPRO_BENCH_TRACE", "BENCH_trace.json")
+    tel.enable()
+    try:
+        traced_s = float("inf")
+        spans_per_run = 0
+        for _ in range(reps):
+            tr = tel.get()
+            tr.reset()
+            t0 = time.perf_counter()
+            session.run(root=root)
+            traced_s = min(traced_s, time.perf_counter() - t0)
+            spans_per_run = max(spans_per_run, len(tr.spans()))
+        # the last traced run's spans become the CI trace artifact
+        trace_events = tel.get().export_chrome(trace_path)
+    finally:
+        tel.disable()
+
+    # null-path microbench: what every traced call site pays when tracing
+    # is off. Differencing two wall-time runs cannot resolve a <= 1% gate
+    # through runner noise; per-op cost x span count can.
+    n_ops = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n_ops):
+        if tel.get().enabled:
+            raise AssertionError("tracer must be disabled here")
+    null_op_s = (time.perf_counter() - t0) / n_ops
+    null_ratio = 1.0 + spans_per_run * null_op_s / max(untraced_s, 1e-9)
+
+    return {
+        "untraced_s": round(untraced_s, 4),
+        "traced_s": round(traced_s, 4),
+        "traced_ratio": round(traced_s / max(untraced_s, 1e-9), 4),
+        "overhead_ceiling": 1.05,
+        "spans_per_run": spans_per_run,
+        "null_op_ns": round(null_op_s * 1e9, 1),
+        "null_ratio": round(null_ratio, 6),
+        "null_ceiling": 1.01,
+        "trace_events": trace_events,
+        "trace_path": trace_path,
+    }
+
+
 def _time_workload(src, graph, params, options):
     """(cold compile+bind+first-run seconds, warm best-of-3 seconds, stats)."""
     import repro
@@ -397,6 +484,7 @@ def measure() -> dict:
     out["warm_bind"] = {"bfs_warm_bind": _time_warm_bind()}
     out["streaming"] = {"bfs_incremental": _time_streaming()}
     out["serving"] = {"serve_mixed_slo": _time_serving()}
+    out["telemetry"] = {"telemetry_overhead": _time_telemetry()}
     return out
 
 
@@ -601,6 +689,49 @@ def check(ci: dict, baseline: dict, threshold: float) -> int:
         else:
             print(f"ok   {name}.lowerings: {got.get('lowerings')} "
                   f"(one per program)")
+    # telemetry overhead gates: traced-vs-untraced is a within-run ratio
+    # (same machine, same warm session) with the absolute-delta jitter
+    # guard; the null-tracer ratio is derived from a per-op microbench and
+    # is deterministic — both always fatal
+    base_tel = baseline.get("telemetry", {})
+    ci_tel = ci.get("telemetry", {})
+    for name in sorted(set(ci_tel) - set(base_tel)):
+        failures.append(
+            f"{name}: telemetry workload measured but absent from the "
+            f"baseline — refresh BENCH_baseline.json to gate it"
+        )
+    for name in sorted(base_tel):
+        got = ci_tel.get(name)
+        if got is None:
+            failures.append(f"{name}: telemetry workload missing from current run")
+            continue
+        ratio = got.get("traced_ratio", float("inf"))
+        ceiling = got.get("overhead_ceiling") or base_tel[name].get("overhead_ceiling")
+        delta = got.get("traced_s", 0.0) - got.get("untraced_s", 0.0)
+        line = (f"{name}.traced_ratio: {ratio:.3f}x "
+                f"(traced {got.get('traced_s')}s vs untraced "
+                f"{got.get('untraced_s')}s, {got.get('spans_per_run')} "
+                f"spans/run)")
+        if ceiling is not None and ratio > ceiling and delta > MIN_REGRESSION_DELTA_S:
+            failures.append(f"REGRESSION {line} > {ceiling}x ceiling")
+        else:
+            print(f"ok   {line} (ceiling {ceiling}x)")
+        null_ratio = got.get("null_ratio", float("inf"))
+        null_ceiling = got.get("null_ceiling") or base_tel[name].get("null_ceiling")
+        nline = (f"{name}.null_ratio: {null_ratio:.6f}x "
+                 f"({got.get('null_op_ns')}ns per disabled call site)")
+        if null_ceiling is not None and null_ratio > null_ceiling:
+            failures.append(f"REGRESSION {nline} > {null_ceiling}x ceiling")
+        else:
+            print(f"ok   {nline} (ceiling {null_ceiling}x)")
+        if not got.get("trace_events"):
+            failures.append(
+                f"REGRESSION {name}: traced run exported no Chrome trace "
+                f"events (expected a non-empty {got.get('trace_path')})"
+            )
+        else:
+            print(f"ok   {name}.trace_events: {got.get('trace_events')} "
+                  f"-> {got.get('trace_path')}")
     for w in warnings:
         print(w)
     for f in failures:

@@ -1,0 +1,87 @@
+"""Tracing & profiling quickstart: one switch turns every stage of the
+pipeline into a span tree you can open in chrome://tracing or Perfetto.
+
+    PYTHONPATH=src python examples/trace_profile.py
+
+The workflow is:
+
+    repro.telemetry.enable()          # process-wide tracer (off by default)
+    ... compile / lower / bind / run  # stages emit nested spans
+    tracer.export_chrome("trace.json")  # open in chrome://tracing
+
+Every traced run also feeds the accelerator's persistent profile:
+`accelerator.report().profile` accumulates per-kernel wall time across
+runs and is saved with the artifact, so a warm-started process inherits
+the profiling baseline of the process that built it.
+"""
+import os
+import tempfile
+
+import repro
+from repro import telemetry
+from repro.algorithms import sources
+from repro.graph import generators
+
+
+def main():
+    telemetry.enable()
+
+    graph = generators.power_law(5_000, 60_000, seed=0)
+
+    # compile -> lower -> bind -> run, all under the tracer
+    program = repro.compile(sources.BFS_ECP)
+    target = repro.Target()
+    acc = program.lower(target, shape=repro.GraphShape.of(graph))
+    session = acc.bind(graph)
+    result = session.run(root=3)
+
+    # 1. per-run summary rides on the result itself
+    trace = result.trace
+    print("=== per-run trace summary (result.trace) ===")
+    print(f"spans in this run: {trace['span_count']}, "
+          f"wall: {trace['total_s'] * 1e3:.1f}ms")
+
+    # 2. top-5 hottest kernels by traced wall time
+    launches = {
+        name[len("launch:"):]: agg
+        for name, agg in trace["spans"].items()
+        if name.startswith("launch:")
+    }
+    print("\n=== top-5 hottest kernels ===")
+    ranked = sorted(launches.items(), key=lambda kv: -kv[1]["total_s"])
+    for name, agg in ranked[:5]:
+        print(f"  {name:>24}: {agg['total_s'] * 1e3:8.1f}ms "
+              f"over {agg['count']} launch(es) "
+              f"(max {agg['max_s'] * 1e3:.1f}ms)")
+
+    # 3. the accelerator's profile section accumulates across runs and is
+    #    persisted with the artifact (warm starts inherit it)
+    session.run(root=17)
+    report = acc.report()
+    print(f"\nprofile: {report.profile['runs']} traced run(s) folded into "
+          f"accelerator {acc.fingerprint[:12]}")
+
+    with tempfile.TemporaryDirectory() as d:
+        acc.save(f"{d}/bfs")
+        loaded = repro.load_accelerator(f"{d}/bfs")
+        inherited = loaded.report().profile
+        print(f"warm-started profile baseline: {inherited['runs']} run(s), "
+              f"{len(inherited['spans'])} span name(s) inherited")
+
+        # 4. export the whole session as a Chrome trace
+        out = os.path.join(d, "trace.json")
+        n = telemetry.get().export_chrome(out)
+        size = os.path.getsize(out)
+        print(f"\nexported {n} events ({size} bytes) -> {out}")
+        print("open chrome://tracing or https://ui.perfetto.dev and load it")
+
+    # 5. Prometheus-style exposition of the same histograms
+    text = telemetry.get().prometheus_text()
+    print("\n=== prometheus exposition (first 6 lines) ===")
+    print("\n".join(text.splitlines()[:6]))
+
+    telemetry.disable()  # back to the zero-overhead null tracer
+
+
+if __name__ == "__main__":
+    main()

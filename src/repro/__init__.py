@@ -40,6 +40,13 @@ Static analysis (lint + determinism certificates, both front-ends):
 ``python -m repro.lint [--json] file.gt|module:program`` is the CLI twin;
 :meth:`GraphService.submit` rejects error-level programs with
 :class:`ProgramRejected` before they reach the registry.
+
+Observability (off by default, near-zero cost when on):
+
+    repro.telemetry.enable()                # process-wide tracer
+    result = session.run(root=3)            # spans: compile/lower/bind/
+    result.trace                            #   launch:<kernel>/...
+    repro.telemetry.get().export_chrome("trace.json")  # chrome://tracing
 """
 
 from .core import (  # noqa: F401 - re-exported public API
@@ -64,6 +71,7 @@ from .analysis import AnalysisResult, Diagnostic, analyze  # noqa: F401
 from .frontend import FrontendError, GraphProgram  # noqa: F401
 from .graph.storage import GraphDelta, GraphUpdateError  # noqa: F401
 from .streaming import StreamingSession  # noqa: F401
+from . import telemetry  # noqa: F401
 from .serving import (  # noqa: F401
     ArtifactRegistry,
     DeadlineExceeded,
@@ -110,5 +118,6 @@ __all__ = [
     "compile_program",
     "program_cache_info",
     "set_program_cache_limit",
+    "telemetry",
     "__version__",
 ]

@@ -41,6 +41,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from .. import telemetry as tel
 from ..core import fir
 from ..core.backend import DTYPES, WEIGHT_KEY, combine
 from ..core.engine import (
@@ -144,6 +145,29 @@ class BatchEngine:
         self.batch_size = k
         self.stats = EngineStats(batch_size=k)
         self._reset(param_sets)
+        tr = tel.get()
+        root_ctx = None
+        if tr.enabled:
+            with tr.span("run", engine=type(self).__name__,
+                         batch_size=k) as sp:
+                self._run_host(keys, k)
+                sp.set(launches=self.stats.total_launches,
+                       msbfs=self.MSBFS_NAME in self.stats.kernel_launches)
+            root_ctx = sp.context()
+        else:
+            self._run_host(keys, k)
+        self.stats.wall_time_s = time.perf_counter() - t0
+        self.stats.run_time_s = max(
+            0.0, self.stats.wall_time_s - self.stats.compile_time_s
+        )
+        results = self._finalize()
+        if root_ctx is not None:
+            trace = tr.summarize(root=root_ctx)
+            for r in results:
+                r.trace = trace  # shared, like stats
+        return results
+
+    def _run_host(self, keys, k: int) -> None:
         plan = self._msbfs()
         if plan is not None and plan.accepts(keys, self.graph.n_vertices):
             from .msbfs import run_msbfs
@@ -153,11 +177,6 @@ class BatchEngine:
             host = self.module.host
             assert host is not None
             self._exec_block(host.main.body, np.ones(k, dtype=bool))
-        self.stats.wall_time_s = time.perf_counter() - t0
-        self.stats.run_time_s = max(
-            0.0, self.stats.wall_time_s - self.stats.compile_time_s
-        )
-        return self._finalize()
 
     def _msbfs(self):
         if not self.enable_msbfs:
@@ -205,6 +224,16 @@ class BatchEngine:
         if kern is None:
             raise EngineError(f"{name!r} is not a device kernel")
         count_launch(self.stats, self.module, name)
+        tr = tel.get()
+        if tr.enabled:
+            with tr.span("launch:" + name, kernel=name, mode="batched",
+                         batch_size=self.batch_size,
+                         active_lanes=int(mask.sum())):
+                self._launch_inner(name, kern, mask)
+        else:
+            self._launch_inner(name, kern, mask)
+
+    def _launch_inner(self, name: str, kern, mask: np.ndarray) -> None:
         bl = self.engine.batched_runner(name)
         scalars = self._kernel_scalars(name, kern)
         # first-touch (cold) timing: every distinct batch size K is its own

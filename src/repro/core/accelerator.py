@@ -41,8 +41,9 @@ import hashlib
 import json
 import os
 import pickle
+import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple, TYPE_CHECKING
 
 import jax
@@ -52,6 +53,7 @@ from . import backend, mir
 from .backend import DTYPES, WEIGHT_KEY
 from .options import CompileOptions
 from .target import Target
+from .. import telemetry as tel
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guards
     from ..graph.storage import GraphData
@@ -414,6 +416,10 @@ class AcceleratorReport:
     #: determinism certificate from repro.analysis (deterministic /
     #: reduction-deterministic / racy) — also stored in artifact manifests
     determinism: str = "unknown"
+    #: profiling baseline from traced runs (repro.telemetry): ``{"runs": N,
+    #: "spans": {name: {count, total_s, max_s}}}`` — persisted with the
+    #: artifact manifest so warm-started processes inherit it
+    profile: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def total_flops_per_launch_set(self) -> float:
@@ -430,6 +436,19 @@ class AcceleratorReport:
             f"/{len(self.kernels)} kernels AOT)",
             f"  determinism: {self.determinism}",
         ]
+        if self.profile.get("runs"):
+            hot = sorted(
+                ((k, v) for k, v in self.profile.get("spans", {}).items()
+                 if k.startswith("launch:")),
+                key=lambda kv: -kv[1].get("total_s", 0.0),
+            )[:5]
+            hottest = ", ".join(
+                f"{k.split(':', 1)[1]} {v['total_s']:.3f}s" for k, v in hot
+            )
+            lines.append(
+                f"  profile: {self.profile['runs']} traced run(s)"
+                + (f"; hottest: {hottest}" if hottest else "")
+            )
         for k in self.kernels:
             extra = f" = {' -> '.join(k.stages)}" if k.stages else ""
             cost = f"{k.flops:.3g} flops" if k.flops else "?"
@@ -502,7 +521,8 @@ class Accelerator:
     """
 
     def __init__(self, program: "Program", target: Target, shape: GraphShape,
-                 *, _blobs: Optional[Dict[str, bytes]] = None):
+                 *, _blobs: Optional[Dict[str, bytes]] = None,
+                 _profile: Optional[Dict[str, Any]] = None):
         module = program.module
         if module.graph.weighted and not shape.weighted:
             raise AcceleratorError(
@@ -515,20 +535,35 @@ class Accelerator:
         self.fingerprint = accelerator_fingerprint(
             program.fingerprint, target, shape
         )
+        # profiling baseline fed by traced runs (repro.telemetry): per span
+        # name -> {count, total_s, max_s}; persisted in the artifact
+        # manifest so warm-started processes inherit it
+        self._profile_lock = threading.Lock()
+        self._profile: Dict[str, Dict[str, float]] = dict(
+            (_profile or {}).get("spans", {})
+        )
+        self.profile_runs = int((_profile or {}).get("runs", 0))
+        tr = tel.get()
+        sp = tr.span(
+            "lower", fingerprint=self.fingerprint[:16], target=target.kind,
+            bucket=f"{shape.n_vertices}v/{shape.n_edges}e",
+            from_artifact=_blobs is not None,
+        ) if tr.enabled else tel.NULL_SPAN
         t0 = time.perf_counter()
-        if target.kind == "local":
-            self.library: Optional[KernelLibrary] = KernelLibrary(
-                module, target, shape
-            )
-            self._plans = self.library.compile_all(blobs=_blobs)
-        else:
-            # distributed supersteps close over the device mesh: lowered
-            # lazily at bind, but the artifact metadata/report still holds
-            self.library = None
-            self._plans = tuple(
-                _kernel_plan(module, k, None, "lazy", 0.0, shape)
-                for k in module.kernels.values()
-            )
+        with sp:
+            if target.kind == "local":
+                self.library: Optional[KernelLibrary] = KernelLibrary(
+                    module, target, shape
+                )
+                self._plans = self.library.compile_all(blobs=_blobs)
+            else:
+                # distributed supersteps close over the device mesh: lowered
+                # lazily at bind, but the artifact metadata/report still holds
+                self.library = None
+                self._plans = tuple(
+                    _kernel_plan(module, k, None, "lazy", 0.0, shape)
+                    for k in module.kernels.values()
+                )
         self.lower_time_s = time.perf_counter() - t0
         self.binds = 0
 
@@ -553,12 +588,40 @@ class Accelerator:
             live_buffer_peak_bytes=peak, lower_time_s=self.lower_time_s,
             pass_report=tuple(module.pass_report),
             determinism=self._determinism(),
+            profile=self.profile(),
         )
 
     def _determinism(self) -> str:
         from ..analysis import determinism_certificate
 
         return determinism_certificate(self.program.module)
+
+    # -- profiling baseline (repro.telemetry) --------------------------------
+    def record_profile(self, trace: Optional[Dict[str, Any]]) -> None:
+        """Fold one traced run's summary (``EngineResult.trace``) into the
+        accelerator's profile. Sessions call this after every traced run;
+        untraced runs pass None and cost one branch."""
+        if not trace:
+            return
+        spans = trace.get("spans") or {}
+        with self._profile_lock:
+            self.profile_runs += 1
+            for name, a in spans.items():
+                cur = self._profile.setdefault(
+                    name, {"count": 0, "total_s": 0.0, "max_s": 0.0}
+                )
+                cur["count"] += a.get("count", 0)
+                cur["total_s"] = round(cur["total_s"] + a.get("total_s", 0.0), 6)
+                cur["max_s"] = max(cur["max_s"], a.get("max_s", 0.0))
+
+    def profile(self) -> Dict[str, Any]:
+        """The accumulated profiling baseline: ``{"runs": N, "spans":
+        {name: {count, total_s, max_s}}}`` (empty until a traced run)."""
+        with self._profile_lock:
+            return {
+                "runs": self.profile_runs,
+                "spans": {k: dict(v) for k, v in self._profile.items()},
+            }
 
     def __repr__(self) -> str:
         return (
@@ -593,8 +656,16 @@ class Accelerator:
 
         self._check(graph)
         self.binds += 1
-        return Session(self.program, graph, backend=self.target.kind,
-                       argv=argv, **self._backend_opts(backend_opts))
+        tr = tel.get()
+        sp = tr.span(
+            "bind", fingerprint=self.fingerprint[:16],
+            n_vertices=graph.n_vertices, n_edges=graph.n_edges,
+        ) if tr.enabled else tel.NULL_SPAN
+        with sp:
+            session = Session(self.program, graph, backend=self.target.kind,
+                              argv=argv, **self._backend_opts(backend_opts))
+        session.accelerator = self
+        return session
 
     def pool(self, graph: "GraphData", size: int = 2, *,
              argv: Optional[list] = None, **backend_opts) -> "SessionPool":
@@ -616,9 +687,11 @@ class Accelerator:
 
         self._check(graph)
         self.binds += 1
-        return BatchSession(self.program, graph, backend=self.target.kind,
-                            argv=argv, max_batch=max_batch, msbfs=msbfs,
-                            **self._backend_opts(backend_opts))
+        session = BatchSession(self.program, graph, backend=self.target.kind,
+                               argv=argv, max_batch=max_batch, msbfs=msbfs,
+                               **self._backend_opts(backend_opts))
+        session.accelerator = self
+        return session
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: str, include_executables: bool = True) -> str:
@@ -667,6 +740,7 @@ class Accelerator:
             "pass_report": list(self.program.module.pass_report),
             "determinism": self._determinism(),
             "kernels": kernels_manifest,
+            "profile": self.profile(),
         }
         with open(os.path.join(path, "program.gt"), "w") as f:
             f.write(self.program.source)
@@ -785,4 +859,6 @@ def load_accelerator(path: str) -> Accelerator:
                     blobs[name] = f.read()
     target = Target.from_dict(manifest["target"])
     shape = GraphShape(**manifest["shape"])
-    return Accelerator(program, target, shape, _blobs=blobs or None)
+    profile = manifest.get("profile")
+    return Accelerator(program, target, shape, _blobs=blobs or None,
+                       _profile=profile if isinstance(profile, dict) else None)

@@ -39,6 +39,7 @@ from jax.experimental.shard_map import shard_map
 from . import backend, fir, mir
 from .engine import Engine
 from .options import CompileOptions
+from .. import telemetry as tel
 from ..graph.storage import GraphData
 
 
@@ -421,9 +422,21 @@ class DistEngine(Engine):
         step, out_prop, op, src_props = entry
         scalars = self._kernel_scalars(name)
         props = {p: self.state[p] for p in src_props}
-        red = self._timed_call(("dist", name), step, props, scalars)[
-            : self.graph.n_vertices
-        ]
+        tr = tel.get()
+        sp = tel.NULL_SPAN
+        if tr.enabled:
+            # shuffle volume: D x D dst-owner buckets of Emax slots each —
+            # the all_to_all element count this superstep routes over ICI
+            d0, d1, emax = self._partitioned().src_local.shape
+            sp = tr.span(
+                "superstep", kernel=name, devices=int(d0),
+                shuffle_elements=int(d0 * d1 * emax),
+                edges=self.graph.n_edges,
+            )
+        with sp:
+            red = self._timed_call(("dist", name), step, props, scalars)[
+                : self.graph.n_vertices
+            ]
         cur = self.state[out_prop]
         self.state[out_prop] = backend.combine(op, cur, red.astype(cur.dtype))
         self.stats.dist_supersteps += 1
@@ -536,17 +549,25 @@ class DistEngine(Engine):
             entries = {s.name: self._dist_kernel(s.name) for s in kern.edge_stages}
             if any(e is not None for e in entries.values()):
                 self._count_launch(name, kern)
-                for stage in kern.stages:
-                    entry = entries.get(stage.name)
-                    if entry is not None:
-                        self._dist_exec(stage.name, entry)
-                    else:
-                        self._execute_kernel(stage.name, stage)
+                tr = tel.get()
+                sp = tr.span("launch:" + name, kernel=name, kind="pipeline",
+                             mode="dist") if tr.enabled else tel.NULL_SPAN
+                with sp:
+                    for stage in kern.stages:
+                        entry = entries.get(stage.name)
+                        if entry is not None:
+                            self._dist_exec(stage.name, entry)
+                        else:
+                            self._execute_kernel(stage.name, stage)
                 return
         elif kern is not None and kern.kind is mir.KernelKind.EDGE:
             entry = self._dist_kernel(name)
             if entry is not None:
                 self._count_launch(name, kern)
-                self._dist_exec(name, entry)
+                tr = tel.get()
+                sp = tr.span("launch:" + name, kernel=name, kind="edge",
+                             mode="dist") if tr.enabled else tel.NULL_SPAN
+                with sp:
+                    self._dist_exec(name, entry)
                 return
         super().launch(name)

@@ -32,6 +32,7 @@ import numpy as np
 from . import backend, fir, mir, semantic
 from .backend import WEIGHT_KEY, DTYPES
 from .options import CompileOptions
+from .. import telemetry as tel
 from ..graph.storage import GraphData
 
 
@@ -103,6 +104,10 @@ class EngineResult:
     # graph version the query was answered against (streaming sessions pin
     # every admitted query to one version; 0 = static/unversioned binding)
     version: int = 0
+    # per-run telemetry summary (repro.telemetry): aggregated span tree of
+    # this run when tracing was enabled, None otherwise. Batched runs share
+    # one summary object across the K results, mirroring `stats`.
+    trace: Optional[Dict[str, Any]] = None
 
 
 @dataclass
@@ -331,7 +336,18 @@ class Engine:
         if kern is None:
             raise EngineError(f"{name!r} is not a device kernel")
         self._count_launch(name, kern)
-        self._execute_kernel(name, kern)
+        tr = tel.get()
+        if not tr.enabled:  # hot path: one attribute check when untraced
+            self._execute_kernel(name, kern)
+            return
+        direction = getattr(kern, "direction", None)
+        with tr.span(
+            "launch:" + name,
+            kernel=name,
+            kind=kern.kind.name.lower(),
+            direction=direction.name.lower() if direction is not None else None,
+        ) as sp:
+            self._execute_kernel(name, kern, sp)
 
     # -- per-launch batching hook (repro.batch) -------------------------------
     def batched_runner(self, name: str) -> "BatchedLaunch":
@@ -383,7 +399,7 @@ class Engine:
         """One logical launch (a fused kernel counts once, not per stage)."""
         count_launch(self.stats, self.module, name)
 
-    def _execute_kernel(self, name: str, kern):
+    def _execute_kernel(self, name: str, kern, sp=tel.NULL_SPAN):
         lk = self._kernel(name)
         scalars = self._kernel_scalars(name)
         if (
@@ -395,14 +411,17 @@ class Engine:
             and lk.frontier is not None
             and lk.run_subset is not None
         ):
-            launched = self._launch_compacted_edge(lk, kern, scalars)
+            launched = self._launch_compacted_edge(lk, kern, scalars, sp)
             if launched:
                 return
         self.stats.full_launches += 1
+        edges = 0
         if kern.kind is mir.KernelKind.EDGE:
-            self.stats.edges_traversed += self.graph.n_edges
+            edges = self.graph.n_edges
         elif isinstance(kern, mir.PipelineKernel):
-            self.stats.edges_traversed += self.graph.n_edges * len(kern.edge_stages)
+            edges = self.graph.n_edges * len(kern.edge_stages)
+        self.stats.edges_traversed += edges
+        sp.set(mode="full", edges=edges)
         updates = self._timed_call(("full", name), lk.run_full, self.state, scalars)
         self.state.update(updates)
 
@@ -438,7 +457,8 @@ class Engine:
         self._build_batch = build
         return build
 
-    def _launch_compacted_edge(self, lk, kern: mir.Kernel, scalars) -> bool:
+    def _launch_compacted_edge(self, lk, kern: mir.Kernel, scalars,
+                               sp=tel.NULL_SPAN) -> bool:
         mask = self._vertex_mask_host(kern, lk.frontier.cond)
         if mask is None:
             return False
@@ -454,6 +474,11 @@ class Engine:
         pad_e = _next_pow2(n_active_edges)
         if pad_e > self.graph.n_edges:
             return False
+        sp.set(
+            mode="compacted", edges=n_active_edges, frontier_size=n_active,
+            frontier_occupancy=round(n_active / max(1, self.graph.n_vertices), 6),
+            pad_v=pad_v, pad_e=pad_e,
+        )
         weights = self.state.get(WEIGHT_KEY, jnp.zeros((1,), jnp.float32))
         batch = self._timed_call(
             ("fbuild", pad_v, pad_e),
@@ -522,7 +547,19 @@ class Engine:
         t0 = time.perf_counter()
         host = self.module.host
         assert host is not None
-        self._exec_host_block(host.main.body)
+        tr = tel.get()
+        root_ctx = None
+        if tr.enabled:
+            with tr.span("run", engine=type(self).__name__,
+                         target=self.target.kind, batch_size=1) as sp:
+                self._exec_host_block(host.main.body)
+                sp.set(launches=self.stats.total_launches,
+                       compacted=self.stats.compacted_launches,
+                       full=self.stats.full_launches,
+                       supersteps=self.stats.dist_supersteps)
+            root_ctx = sp.context()
+        else:
+            self._exec_host_block(host.main.body)
         self.stats.wall_time_s = time.perf_counter() - t0
         self.stats.run_time_s = max(
             0.0, self.stats.wall_time_s - self.stats.compile_time_s
@@ -539,7 +576,12 @@ class Engine:
             props[p.name] = arr
         if WEIGHT_KEY in self.state:
             props["weight"] = np.asarray(self.state[WEIGHT_KEY])
-        return EngineResult(properties=props, host_env=dict(self.host_env), stats=self.stats)
+        result = EngineResult(
+            properties=props, host_env=dict(self.host_env), stats=self.stats
+        )
+        if root_ctx is not None:
+            result.trace = tr.summarize(root=root_ctx)
+        return result
 
     def _exec_host_block(self, body: List[fir.Stmt]):
         for st in body:

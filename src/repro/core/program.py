@@ -58,6 +58,7 @@ from . import mir, passes, semantic
 from .lexer import LexError
 from .options import CompileOptions
 from .parser import ParseError, parse
+from .. import telemetry as tel
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from ..frontend import GraphProgram
@@ -513,10 +514,20 @@ def compile_program(
     (``program.diagnostics()``). Strictness is not part of the cache key —
     it gates raising, not the compiled artifact.
     """
+    tr = tel.get()
+    if not tr.enabled:
+        return _compile_impl(src, options, strict, tel.NULL_SPAN)
+    with tr.span("compile") as sp:
+        return _compile_impl(src, options, strict, sp)
+
+
+def _compile_impl(src, options, strict, sp) -> Program:
     if isinstance(src, str):
+        sp.set(frontend="text")
         module, mir_key = _analyze_text(src)
         source_text = src
     elif hasattr(src, "to_fir") and hasattr(src, "to_source"):
+        sp.set(frontend="embedded")
         module, mir_key, source_text = _analyze_embedded(src)
     else:
         raise ProgramError(
@@ -524,12 +535,15 @@ def compile_program(
         )
     opts = options if options is not None else CompileOptions()
     key = program_fingerprint(mir_key, opts)
+    sp.set(fingerprint=key[:16])
     with _CACHE_LOCK:
         prog = _PROGRAM_CACHE.get(key)
     if prog is not None:
+        sp.set(cache_hit=True)
         if strict:
             _check_strict(src, opts)
         return prog
+    sp.set(cache_hit=False)
     # the MIR optimization pipeline (CompileOptions.passes) specializes the
     # options-independent base module per option set; it works on a copy,
     # so the cached base stays pristine for other option sets

@@ -276,7 +276,7 @@ def run_cell(
     try:
         with mesh:
             if phase in ("gate", "all"):
-                t0 = time.time()
+                t0 = time.perf_counter()
                 tok_target = 4_096 if cfg.moe else 16_384
                 n_micro = (_micro_batches(cfg, shape, n_batch_shards, tok_target)
                            if shape.kind == "train" else 1)
@@ -301,7 +301,7 @@ def run_cell(
                 result["gate"] = {
                     "ok": True,
                     "n_microbatches": n_micro,
-                    "compile_s": round(time.time() - t0, 1),
+                    "compile_s": round(time.perf_counter() - t0, 1),
                     "memory_analysis": mem_d,
                     "cost_flops": float(cost.get("flops", -1)) if cost else None,
                     "collectives": parse_collectives(compiled.as_text())["counts"],

@@ -68,6 +68,53 @@ def generate(model: Model, params, prompts: jnp.ndarray, gen_len: int,
 GRAPH_ALGOS = ("bfs", "pagerank", "sssp")
 
 
+def _export_trace(trace_dir: str) -> None:
+    """Dump the session's telemetry: Chrome trace + per-request spans.
+
+    Writes ``trace.json`` (chrome://tracing / Perfetto ``trace_event``
+    format) and ``requests.jsonl`` (one line per request trace: the
+    span tree flattened with durations and attributes), then prints the
+    queue-wait vs execution latency split from the span histograms.
+    """
+    import json
+    import os
+
+    from .. import telemetry as tel
+
+    tr = tel.get()
+    os.makedirs(trace_dir, exist_ok=True)
+    chrome = os.path.join(trace_dir, "trace.json")
+    n = tr.export_chrome(chrome)
+    by_trace: dict = {}
+    for s in tr.spans():
+        by_trace.setdefault(s.trace_id, []).append(s)
+    req_path = os.path.join(trace_dir, "requests.jsonl")
+    with open(req_path, "w") as f:
+        for trace_id in sorted(by_trace):
+            spans = sorted(by_trace[trace_id], key=lambda s: s.t_start)
+            f.write(json.dumps({
+                "trace_id": trace_id,
+                "spans": [
+                    {
+                        "name": s.name,
+                        "span_id": s.span_id,
+                        "parent_id": s.parent_id,
+                        "duration_ms": round((s.t_end - s.t_start) * 1e3, 3),
+                        "attrs": dict(s.attrs),
+                    }
+                    for s in spans
+                ],
+            }) + "\n")
+    hists = tr.histograms()
+    qw, ex = hists.get("queue_wait"), hists.get("execute")
+    if qw is not None and ex is not None and qw.total and ex.total:
+        print(f"latency split: queue-wait p50={qw.percentile(0.5) * 1e3:.2f}ms "
+              f"(total {qw.sum_s * 1e3:.1f}ms) vs execution "
+              f"p50={ex.percentile(0.5) * 1e3:.2f}ms "
+              f"(total {ex.sum_s * 1e3:.1f}ms) over {ex.total} request(s)")
+    print(f"trace: {n} span(s) -> {chrome}; per-request dumps -> {req_path}")
+
+
 def resolve_accelerator(program, graph, backend: str, artifact_dir: str,
                         verbose: bool = True):
     """Load-or-lower the Accelerator for (program, backend, graph shape).
@@ -104,8 +151,12 @@ def serve_graph(args) -> int:
     """
     import json
 
+    from .. import telemetry as tel
     from ..graph import generators
     from ..serving import serve
+
+    if args.trace_dir:
+        tel.enable()
 
     result_prop = {"bfs": "old_level", "pagerank": "rank", "sssp": "SP"}[args.graph]
     weighted = args.graph == "sssp"
@@ -161,6 +212,8 @@ def serve_graph(args) -> int:
           f"max={sample.max():.4g}")
     print("service stats snapshot:")
     print(json.dumps(stats, indent=2, sort_keys=True))
+    if args.trace_dir:
+        _export_trace(args.trace_dir)
     return 0
 
 
@@ -183,6 +236,10 @@ def serve_streaming(args) -> int:
     from ..graph.storage import GraphDelta
     from ..streaming import StreamingSession
 
+    from .. import telemetry as tel
+
+    if args.trace_dir:
+        tel.enable()
     src = {
         "bfs": sources.BFS_ECP,
         "pagerank": sources.PAGERANK,
@@ -255,6 +312,8 @@ def serve_streaming(args) -> int:
               f"{ss.incremental_runs} incremental repairs, "
               f"{ss.full_runs} full runs "
               f"(monotone={ss.incremental_info.monotone})")
+    if args.trace_dir:
+        _export_trace(args.trace_dir)
     return 0
 
 
@@ -283,6 +342,12 @@ def main(argv=None):
                     help="graph path: warm-start from (or populate) a saved "
                          "Accelerator artifact directory — compile cost is "
                          "paid once per (program, target, shape), offline")
+    ap.add_argument("--trace-dir", default=None,
+                    help="graph path: enable repro.telemetry tracing and "
+                         "write trace.json (chrome://tracing) plus "
+                         "requests.jsonl (per-request span dumps) to DIR "
+                         "on exit; prints the queue-wait vs execution "
+                         "latency split")
     ap.add_argument("--vertices", type=int, default=2000)
     ap.add_argument("--edges", type=int, default=16000)
     ap.add_argument("--backend", choices=("local", "distributed"), default="local")

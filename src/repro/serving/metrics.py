@@ -72,6 +72,21 @@ class LatencyHistogram:
         self.sum_s += seconds
         self.max_s = max(self.max_s, seconds)
 
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold ``other`` into this histogram in place (and return self).
+
+        Bucket boundaries are module constants, so elementwise addition is
+        exact — this is how multi-service / multi-worker snapshots (and the
+        telemetry layer's per-span duration histograms) aggregate without
+        per-sample storage.
+        """
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.total += other.total
+        self.sum_s += other.sum_s
+        self.max_s = max(self.max_s, other.max_s)
+        return self
+
     def percentile(self, q: float) -> float:
         """Upper bound (seconds) of the bucket holding the q-th percentile."""
         if not self.total:

@@ -37,6 +37,7 @@ from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
+from .. import telemetry as tel
 from ..core.session import ServiceClosed
 from .metrics import ServeMetrics
 
@@ -66,7 +67,7 @@ class Request:
 
     __slots__ = (
         "job", "params", "group_key", "tenant", "label",
-        "deadline", "future", "t_submit",
+        "deadline", "future", "t_submit", "t_submit_pc", "t_join_pc", "ctx",
     )
 
     def __init__(self, job: Any, params: Dict[str, Any], group_key: Any,
@@ -80,6 +81,11 @@ class Request:
         self.deadline = deadline  # absolute time.monotonic(), or None
         self.future: "Future[Any]" = Future()
         self.t_submit = time.monotonic()
+        self.t_submit_pc = time.perf_counter()
+        self.t_join_pc = 0.0  # set when the request joins a forming batch
+        # span context of the submitting thread: batch formation and
+        # execution happen on other threads, so their spans parent here
+        self.ctx = tel.current()
 
 
 class RequestScheduler:
@@ -220,6 +226,7 @@ class RequestScheduler:
             tenant = self._pick_tenant_locked()
             q = self._queues[tenant]
             head = q.popleft()
+            head.t_join_pc = time.perf_counter()
             batch = [head]
             if self.max_batch > 1:
                 # wait briefly for same-group stragglers — capped by the
@@ -229,7 +236,9 @@ class RequestScheduler:
                     limit = min(limit, head.deadline)
                 while len(batch) < self.max_batch:
                     while q and q[0].group_key == head.group_key:
-                        batch.append(q.popleft())
+                        straggler = q.popleft()
+                        straggler.t_join_pc = time.perf_counter()
+                        batch.append(straggler)
                         if len(batch) >= self.max_batch:
                             break
                     if len(batch) >= self.max_batch or self._closed:
@@ -240,7 +249,19 @@ class RequestScheduler:
                     self._cond.wait(timeout=remaining)
             self._in_flight += len(batch)
             self._served[tenant] = self._served.get(tenant, 0) + len(batch)
-            return batch
+        tr = tel.get()
+        if tr.enabled:
+            # fill-wait: head pop -> batch sealed (the head pays it all)
+            tr.record_span(
+                "batch_form", head.t_join_pc, time.perf_counter(),
+                parent=head.ctx, tenant=tenant, batch=len(batch),
+            )
+            for req in batch:
+                tr.record_span(
+                    "queue_wait", req.t_submit_pc, req.t_join_pc,
+                    parent=req.ctx, tenant=req.tenant, label=req.label,
+                )
+        return batch
 
     # -- dispatch ------------------------------------------------------------
     def _loop(self) -> None:
@@ -260,14 +281,37 @@ class RequestScheduler:
 
     def _run_batch(self, batch: List[Request]) -> None:
         self.metrics.batch(len(batch))
+        head = batch[0]
+        tr = tel.get()
+        # live span on the worker thread, parented to the head request's
+        # submit-side context: engine spans opened inside _execute nest
+        # under it, keeping one connected tree per request
+        sp = (
+            tr.span("execute", parent=head.ctx, tenant=head.tenant,
+                    label=head.label, batch=len(batch))
+            if tr.enabled else tel.NULL_SPAN
+        )
         try:
-            results = self._execute(batch[0].job, [r.params for r in batch])
+            with sp:
+                results = self._execute(
+                    batch[0].job, [r.params for r in batch]
+                )
         except BaseException as exc:
             for req in batch:
                 self.metrics.error(req.tenant, req.label)
                 req.future.set_exception(exc)
             self._settle(len(batch))
             return
+        if tr.enabled and len(batch) > 1:
+            # stragglers share the head's execution interval: mirror it
+            # into each request's own tree so every tree carries the
+            # full queue-wait vs execution split
+            for req in batch[1:]:
+                tr.record_span(
+                    "execute", sp.t_start, sp.t_end, parent=req.ctx,
+                    tenant=req.tenant, label=req.label,
+                    batch=len(batch), shared=True,
+                )
         now = time.monotonic()
         for req, res in zip(batch, results):
             missed = req.deadline is not None and now > req.deadline

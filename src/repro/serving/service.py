@@ -27,6 +27,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, Optional, Tuple, Union
 
+from .. import telemetry as tel
 from ..core.program import Program, compile_program
 from ..core.session import ServiceClosed
 from ..core.target import Target
@@ -198,7 +199,24 @@ class GraphService:
         """
         if self._closed:
             raise ServiceClosed("GraphService is closed")
+        tr = tel.get()
+        if not tr.enabled:
+            return self._submit_impl(
+                program_or_name, graph, tenant, deadline_s, params,
+                tel.NULL_SPAN,
+            )
+        # root span of this request's trace: queue_wait / batch_form /
+        # execute spans recorded on scheduler threads parent to it via
+        # the Request's captured SpanContext
+        with tr.span("schedule", tenant=tenant) as sp:
+            return self._submit_impl(
+                program_or_name, graph, tenant, deadline_s, params, sp
+            )
+
+    def _submit_impl(self, program_or_name, graph, tenant, deadline_s,
+                     params, sp):
         program, label = self._resolve_program(program_or_name)
+        sp.set(program=label, fingerprint=program.fingerprint[:16])
         analysis = program.diagnostics()
         if analysis.errors:
             self.metrics.rejected(tenant, label, "analysis")
@@ -245,6 +263,9 @@ class GraphService:
         """JSON-serializable metrics snapshot (see serving/metrics.py)."""
         snap = self.metrics.snapshot()
         snap["registry"] = {**snap["registry"], **self.registry.info()}
+        tr = tel.get()
+        if tr.enabled:
+            snap["telemetry"] = tr.prometheus_text()
         return snap
 
     @property

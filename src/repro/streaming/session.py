@@ -35,6 +35,7 @@ from ..core.engine import EngineResult
 from ..core.passes import analyze_incremental
 from ..graph.storage import GraphData, GraphDelta, GraphUpdateError
 from .incremental import repair_result
+from .. import telemetry as tel
 
 __all__ = ["StreamingSession"]
 
@@ -202,26 +203,32 @@ class StreamingSession:
         (new lowering unless an artifact for the new bucket is cached).
         """
         t0 = time.perf_counter()
+        tr = tel.get()
+        sp = tr.span(
+            "update", n_added=delta.n_added, program=self.program.fingerprint[:16],
+        ) if tr.enabled else tel.NULL_SPAN
         self._gate.acquire_write()
         try:
-            rebucketed = False
-            try:
-                self.graph.apply_updates(delta)
-            except GraphUpdateError:
-                self._rebucket(delta)
-                rebucketed = True
-            self.updates += 1
-            if (
-                not rebucketed
-                and self.compact_every
-                and self.updates % self.compact_every == 0
-            ):
-                self.graph.compact()
-            target = self.pool if self.pool is not None else self.session
-            target.refresh_graph(self.graph)
-            self.version += 1
-            self._deltas.append((self.version, None if rebucketed else delta))
-            return self.version
+            with sp:
+                rebucketed = False
+                try:
+                    self.graph.apply_updates(delta)
+                except GraphUpdateError:
+                    self._rebucket(delta)
+                    rebucketed = True
+                self.updates += 1
+                if (
+                    not rebucketed
+                    and self.compact_every
+                    and self.updates % self.compact_every == 0
+                ):
+                    self.graph.compact()
+                target = self.pool if self.pool is not None else self.session
+                target.refresh_graph(self.graph)
+                self.version += 1
+                self._deltas.append((self.version, None if rebucketed else delta))
+                sp.set(version=self.version, rebucketed=rebucketed)
+                return self.version
         finally:
             self._gate.release_write()
             self.update_apply_s.append(time.perf_counter() - t0)
@@ -349,10 +356,17 @@ class StreamingSession:
         added = self._added_since(cached_version)
         if added is None:
             return None
-        result = repair_result(
-            self.incremental_info, self.graph, cached, added,
-            version=self.version,
-        )
+        tr = tel.get()
+        sp = tr.span(
+            "repair", program=self.program.fingerprint[:16],
+            from_version=cached_version, to_version=self.version,
+            added_edges=int(len(added)),
+        ) if tr.enabled else tel.NULL_SPAN
+        with sp:
+            result = repair_result(
+                self.incremental_info, self.graph, cached, added,
+                version=self.version,
+            )
         self.incremental_runs += 1
         self._store(key, result)
         return result

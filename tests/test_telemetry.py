@@ -1,0 +1,287 @@
+"""End-to-end tracing tests: span trees, exporters, profile persistence.
+
+The tracer is process-global, so every test runs under the ``tracer``
+fixture, which guarantees a fresh enabled tracer on entry and a swap
+back to the null tracer on exit (pytest-xdist shards by test, and within
+one worker tests are sequential, so no cross-test bleed).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro import telemetry
+from repro.algorithms import sources
+from repro.core.program import clear_program_cache
+from repro.graph import generators
+
+
+@pytest.fixture
+def tracer():
+    tr = telemetry.enable()
+    tr.reset()
+    yield tr
+    telemetry.disable()
+
+
+def _tree_names(tr, root_span):
+    """All span names reachable from root_span (exclusive) via parent links."""
+    by_parent = {}
+    for s in tr.spans():
+        by_parent.setdefault(s.parent_id, []).append(s)
+    names, stack = [], [root_span.span_id]
+    while stack:
+        sid = stack.pop()
+        for child in by_parent.get(sid, []):
+            names.append(child.name)
+            stack.append(child.span_id)
+    return names
+
+
+# --------------------------------------------------------------------------
+# golden span trees
+# --------------------------------------------------------------------------
+
+
+def test_golden_span_tree_local_bfs(tracer):
+    clear_program_cache()
+    g = generators.power_law(300, 2400, seed=2)
+    program = repro.compile(sources.BFS_ECP)
+    acc = program.lower(repro.Target(), shape=repro.GraphShape.of(g))
+    result = acc.bind(g).run(root=3)
+
+    by_name = {}
+    for s in tracer.spans():
+        by_name.setdefault(s.name, []).append(s)
+    assert len(by_name["compile"]) == 1
+    assert len(by_name["lower"]) == 1
+    assert len(by_name["bind"]) == 1
+    assert len(by_name["run"]) == 1
+
+    # every kernel launch counted by EngineStats appears as a launch span
+    launch_spans = [
+        s for s in tracer.spans() if s.name.startswith("launch:")
+    ]
+    assert len(launch_spans) == result.stats.total_launches
+
+    # one connected tree: all launch spans descend from the run span
+    run_span = by_name["run"][0]
+    names = _tree_names(tracer, run_span)
+    assert sum(n.startswith("launch:") for n in names) == len(launch_spans)
+    assert all(s.trace_id == run_span.trace_id for s in launch_spans)
+
+    # spans carry their typed attributes
+    assert by_name["compile"][0].attrs["fingerprint"]
+    assert by_name["lower"][0].attrs["target"] == "local"
+    assert by_name["bind"][0].attrs["n_vertices"] == g.n_vertices
+    assert run_span.attrs["launches"] == result.stats.total_launches
+    modes = {s.attrs.get("mode") for s in launch_spans}
+    assert modes <= {"full", "compacted"}
+
+    # the per-run summary rides on the result and matches the tree
+    assert result.trace is not None
+    trace_launches = sum(
+        agg["count"] for name, agg in result.trace["spans"].items()
+        if name.startswith("launch:")
+    )
+    assert trace_launches == result.stats.total_launches
+
+
+def test_golden_span_tree_distributed_bfs(subproc):
+    out = subproc(
+        """
+import numpy as np
+import repro
+from repro import telemetry
+from repro.algorithms import sources
+from repro.graph import generators
+
+tr = telemetry.enable()
+g = generators.power_law(300, 2400, seed=2)
+program = repro.compile(sources.BFS_ECP)
+result = program.bind(g, backend="distributed").run(root=3)
+
+spans = tr.spans()
+by_name = {}
+for s in spans:
+    by_name.setdefault(s.name, []).append(s)
+launch_spans = [s for s in spans if s.name.startswith("launch:")]
+assert len(launch_spans) == result.stats.total_launches, (
+    len(launch_spans), result.stats.total_launches)
+assert len(by_name["run"]) == 1
+run_span = by_name["run"][0]
+assert run_span.attrs["engine"] == "DistEngine"
+assert all(s.trace_id == run_span.trace_id for s in launch_spans)
+supersteps = by_name.get("superstep", [])
+assert result.stats.dist_supersteps > 0
+assert len(supersteps) == result.stats.dist_supersteps, (
+    len(supersteps), result.stats.dist_supersteps)
+assert all(s.attrs["devices"] >= 1 for s in supersteps)
+assert all(s.attrs["shuffle_elements"] > 0 for s in supersteps)
+dist_modes = {s.attrs.get("mode") for s in launch_spans}
+assert "dist" in dist_modes, dist_modes
+telemetry.disable()
+print("dist trace ok")
+""",
+        devices=4,
+    )
+    assert "dist trace ok" in out
+
+
+# --------------------------------------------------------------------------
+# enable/disable round trip
+# --------------------------------------------------------------------------
+
+
+def test_disable_retains_zero_spans():
+    tr = telemetry.enable()
+    tr.reset()
+    g = generators.power_law(200, 1200, seed=0)
+    repro.compile(sources.BFS_ECP).bind(g).run(root=0)
+    assert tr.spans()
+
+    telemetry.disable()
+    assert telemetry.get().spans() == []
+    assert not telemetry.enabled()
+    # the old tracer object was drained too (no hidden retention)
+    assert tr.spans() == []
+
+    # instrumented paths still run (as no-ops) while disabled
+    result = repro.compile(sources.BFS_ECP).bind(g).run(root=1)
+    assert telemetry.get().spans() == []
+    assert result.trace is None
+
+    # re-enable starts clean
+    tr2 = telemetry.enable()
+    try:
+        assert tr2.spans() == []
+        r2 = repro.compile(sources.BFS_ECP).bind(g).run(root=2)
+        assert r2.trace is not None
+        assert any(s.name == "run" for s in tr2.spans())
+    finally:
+        telemetry.disable()
+
+
+def test_null_tracer_api_is_complete(tmp_path):
+    telemetry.disable()
+    tr = telemetry.get()
+    assert not tr.enabled
+    with tr.span("anything", attr=1) as sp:
+        sp.set(more=2)
+    assert tr.current() is None
+    assert tr.spans() == []
+    assert tr.summarize()["span_count"] == 0
+    # exporters still produce valid (empty) documents
+    out = tmp_path / "empty.json"
+    assert tr.export_chrome(str(out)) == 0
+    doc = json.loads(out.read_text())
+    assert doc["traceEvents"] == []
+    assert tr.prometheus_text() == ""  # empty exposition is valid
+
+
+# --------------------------------------------------------------------------
+# exporters
+# --------------------------------------------------------------------------
+
+
+def test_chrome_export_valid_trace_event_json(tracer, tmp_path):
+    g = generators.power_law(200, 1200, seed=1)
+    repro.compile(sources.BFS_ECP).bind(g).run(root=0)
+    path = tmp_path / "trace.json"
+    n = tracer.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    complete = [e for e in events if e["ph"] == "X"]
+    assert len(complete) == n == len(tracer.spans())
+    for e in complete:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        assert "span_id" in e["args"] and "trace_id" in e["args"]
+    # thread metadata events make Perfetto lanes readable
+    assert any(e["ph"] == "M" and e["name"] == "thread_name" for e in events)
+
+
+def test_prometheus_exposition(tracer):
+    g = generators.power_law(200, 1200, seed=1)
+    repro.compile(sources.BFS_ECP).bind(g).run(root=0)
+    text = tracer.prometheus_text()
+    assert 'repro_span_count{span="run"} 1' in text
+    assert 'repro_span_duration_seconds_sum{span="run"}' in text
+    assert 'quantile="0.99"' in text
+
+
+# --------------------------------------------------------------------------
+# serving integration
+# --------------------------------------------------------------------------
+
+
+def test_service_request_span_trees_and_stats(tracer):
+    g = generators.power_law(200, 1400, seed=5)
+    with repro.serve(False, workers=2, max_batch=4) as svc:
+        futs = [svc.submit("bfs", g, root=r) for r in range(3)]
+        for f in futs:
+            f.result()
+        svc.scheduler.drain(timeout=30)
+        stats = svc.stats()
+
+    roots = [s for s in tracer.spans() if s.name == "schedule"]
+    assert len(roots) == 3
+    for root in roots:
+        names = _tree_names(tracer, root)
+        assert "queue_wait" in names
+        assert "execute" in names
+    # the text exposition is merged into the stats snapshot
+    assert "repro_span_count" in stats["telemetry"]
+    assert 'span="execute"' in stats["telemetry"]
+
+
+# --------------------------------------------------------------------------
+# profile persistence
+# --------------------------------------------------------------------------
+
+
+def test_profile_persists_with_artifact(tracer, tmp_path):
+    clear_program_cache()
+    g = generators.power_law(300, 2400, seed=3)
+    program = repro.compile(sources.BFS_ECP)
+    acc = program.lower(repro.Target(), shape=repro.GraphShape.of(g))
+    session = acc.bind(g)
+    session.run(root=1)
+    session.run(root=2)
+
+    prof = acc.report().profile
+    assert prof["runs"] == 2
+    assert any(name.startswith("launch:") for name in prof["spans"])
+    for agg in prof["spans"].values():
+        assert agg["count"] > 0 and agg["total_s"] >= 0
+
+    acc.save(str(tmp_path / "bfs"))
+    loaded = repro.load_accelerator(str(tmp_path / "bfs"))
+    inherited = loaded.report().profile
+    assert inherited["runs"] == 2
+    assert inherited["spans"].keys() == prof["spans"].keys()
+    # warm runs keep accumulating on top of the inherited baseline
+    loaded.bind(g).run(root=3)
+    assert loaded.report().profile["runs"] == 3
+    assert "traced run(s)" in loaded.report().describe()
+
+
+def test_result_trace_none_when_untraced():
+    telemetry.disable()
+    g = generators.power_law(200, 1200, seed=0)
+    result = repro.compile(sources.BFS_ECP).bind(g).run(root=0)
+    assert result.trace is None
+
+
+def test_batched_runs_share_one_trace_summary(tracer):
+    g = generators.power_law(300, 2400, seed=4)
+    batch = repro.compile(sources.BFS_ECP).bind_batch(g)
+    roots = np.arange(4)
+    results = batch.run_many([{"root": int(r)} for r in roots])
+    traces = {id(r.trace) for r in results}
+    assert len(traces) == 1
+    trace = results[0].trace
+    assert trace["span_count"] >= 1
+    run_spans = [s for s in tracer.spans() if s.name == "run"]
+    assert any(s.attrs.get("batch_size", 0) >= 1 for s in run_spans)
