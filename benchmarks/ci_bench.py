@@ -22,7 +22,12 @@ Two modes:
   stay within 1.05x of the untraced run, the disabled null tracer within
   1.01x (measured as per-launch null-path cost scaled by the run's span
   count), and the traced run's Chrome trace is exported to
-  ``BENCH_trace.json`` (uploaded as a CI artifact).
+  ``BENCH_trace.json`` (uploaded as a CI artifact). An ``autotune``
+  section (autotune_bfs) runs the repro.autotune search on a deep
+  multigraph where frontier compaction is a structural win, and gates
+  the tuned Target at >= 1.15x over ``Target.baseline()`` (interleaved
+  within-run pairing), zero-trial reuse from a fresh TuningCache,
+  manifest round-tripping of the config, and >= 1 serving tuned hit.
 
 * ``--check``: compares a freshly written ``BENCH_ci.json`` against the
   committed ``BENCH_baseline.json`` and exits non-zero when any workload's
@@ -431,6 +436,113 @@ def _time_telemetry():
     }
 
 
+def _time_autotune():
+    """Autotuning gate (autotune_bfs): the full repro.autotune story on
+    one workload where the knob choice is structural, not noise.
+
+    The probe is BFS on a deep multigraph (200-level chain, 1000 parallel
+    edges per hop): frontiers stay single-vertex while full-edge streaming
+    pays ~400k edges per level, so ``compact_frontier`` Targets win by a
+    wide, machine-independent margin (~200x fewer edges traversed).
+    Measures and gates:
+
+    * the search finds a tuned Target whose interleaved best-of-5 warm
+      wall time beats ``Target.baseline()`` by >= 1.15x (fatal, within-run
+      paired comparison);
+    * a fresh TuningCache over the same store (the fresh-process
+      analogue) resolves the config with **zero** search trials and >= 1
+      cache hit (fatal);
+    * the winner's accelerator stamps the config into its artifact
+      manifest and ``load_accelerator`` restores it bit-identically
+      (fatal);
+    * a ``repro.serve()`` service over the same store resolves the tuned
+      Target on submission — ``programs.bfs.tuned_hits >= 1`` (fatal).
+    """
+    import shutil
+    import tempfile
+
+    import repro
+    from repro.autotune import AutoTuner, TuningCache, tuning_dir_for
+    from repro.core.accelerator import load_accelerator
+    from repro.core.program import clear_program_cache
+    from repro.core.target import Target
+    from repro.graph import generators
+    from repro.serving.service import NAMED_ALGORITHMS
+
+    clear_program_cache()
+    store = tempfile.mkdtemp(prefix="repro-bench-autotune-")
+    try:
+        g = generators.deep_chain(200, multiplicity=1000)
+        program = repro.compile(NAMED_ALGORITHMS["bfs"])
+        params = {"root": 0}
+
+        tuner = AutoTuner(TuningCache(tuning_dir_for(store)),
+                          reps=2, max_candidates=6)
+        t0 = time.perf_counter()
+        report = tuner.tune(program, g, params=params)
+        search_s = time.perf_counter() - t0
+
+        # fresh-process analogue: a new cache instance over the same
+        # store must resolve the config from disk with zero trials
+        warm_cache = TuningCache(tuning_dir_for(store))
+        warm = AutoTuner(warm_cache).tune(program, g, params=params)
+
+        # paired steady-state: tuned vs Target.baseline(), interleaved
+        # best-of-5 warm wall times (interleaving cancels runner drift)
+        base_target = replace(
+            Target.baseline(), kind=report.config.target.kind
+        )
+        tuned_acc = report.accelerator
+        if tuned_acc is None:  # pragma: no cover - search always sets it
+            tuned_acc = program.lower(report.config.target, graph=g)
+        base_acc = program.lower(base_target, graph=g)
+        tuned_sess = tuned_acc.bind(g)
+        base_sess = base_acc.bind(g)
+        tuned_res = tuned_sess.run(**params)   # warm both paths
+        base_res = base_sess.run(**params)
+        tuned_s = base_s = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            tuned_sess.run(**params)
+            tuned_s = min(tuned_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            base_sess.run(**params)
+            base_s = min(base_s, time.perf_counter() - t0)
+        tuned_sess.close()
+        base_sess.close()
+
+        # artifact manifest round trip
+        art_dir = tuned_acc.save(os.path.join(store, "bfs-tuned"))
+        loaded = load_accelerator(art_dir)
+        manifest_roundtrip = loaded.tuned == report.config.to_dict()
+
+        # serving resolves the tuned Target by lookup on every submit
+        with repro.serve(store, workers=1) as svc:
+            svc.run("bfs", g, **params)
+            snap = svc.stats()
+        service_tuned_hits = snap["programs"]["bfs"]["tuned_hits"]
+
+        return {
+            "tuned_target": report.config.target.describe(),
+            "search_s": round(search_s, 3),
+            "trials_search": report.trials,
+            "candidates": report.candidates,
+            "objective_s": round(report.config.objective_s, 4),
+            "tuned_steady_s": round(tuned_s, 4),
+            "baseline_steady_s": round(base_s, 4),
+            "tuned_speedup": round(base_s / max(tuned_s, 1e-9), 3),
+            "speedup_floor": 1.15,
+            "edges_tuned": int(tuned_res.stats.edges_traversed),
+            "edges_baseline": int(base_res.stats.edges_traversed),
+            "trials_cached": warm.trials,
+            "cache_hits": warm_cache.hits,
+            "manifest_roundtrip": manifest_roundtrip,
+            "service_tuned_hits": service_tuned_hits,
+        }
+    finally:
+        shutil.rmtree(store, ignore_errors=True)
+
+
 def _time_workload(src, graph, params, options):
     """(cold compile+bind+first-run seconds, warm best-of-3 seconds, stats)."""
     import repro
@@ -485,6 +597,7 @@ def measure() -> dict:
     out["streaming"] = {"bfs_incremental": _time_streaming()}
     out["serving"] = {"serve_mixed_slo": _time_serving()}
     out["telemetry"] = {"telemetry_overhead": _time_telemetry()}
+    out["autotune"] = {"autotune_bfs": _time_autotune()}
     return out
 
 
@@ -732,6 +845,62 @@ def check(ci: dict, baseline: dict, threshold: float) -> int:
         else:
             print(f"ok   {name}.trace_events: {got.get('trace_events')} "
                   f"-> {got.get('trace_path')}")
+    # autotuning gates: the tuned-vs-baseline speedup is a within-run
+    # interleaved paired measurement on a structurally-differentiated
+    # workload, and the cache/manifest/serving reuse checks are exact
+    # invariants — all always fatal
+    base_tune = baseline.get("autotune", {})
+    ci_tune = ci.get("autotune", {})
+    for name in sorted(set(ci_tune) - set(base_tune)):
+        failures.append(
+            f"{name}: autotune workload measured but absent from the "
+            f"baseline — refresh BENCH_baseline.json to gate it"
+        )
+    for name in sorted(base_tune):
+        got = ci_tune.get(name)
+        if got is None:
+            failures.append(f"{name}: autotune workload missing from current run")
+            continue
+        speedup = got.get("tuned_speedup", 0.0)
+        floor = got.get("speedup_floor") or base_tune[name].get("speedup_floor")
+        line = (f"{name}.tuned_speedup: {speedup:.2f}x over Target.baseline() "
+                f"(tuned {got.get('tuned_steady_s')}s [{got.get('tuned_target')}] "
+                f"vs baseline {got.get('baseline_steady_s')}s, "
+                f"{got.get('edges_tuned')} vs {got.get('edges_baseline')} "
+                f"edges traversed)")
+        if floor is not None and speedup < floor:
+            failures.append(f"REGRESSION {line} < {floor}x acceptance floor")
+        else:
+            print(f"ok   {line} (floor {floor}x)")
+        if got.get("trials_cached", -1) != 0 or got.get("cache_hits", 0) < 1:
+            failures.append(
+                f"REGRESSION {name}: fresh TuningCache re-resolution ran "
+                f"{got.get('trials_cached')} trial(s) with "
+                f"{got.get('cache_hits')} hit(s) — a persisted config must "
+                f"reuse with zero search"
+            )
+        else:
+            print(f"ok   {name}: warm re-resolution trials=0, "
+                  f"cache_hits={got.get('cache_hits')} "
+                  f"(search was {got.get('trials_search')} trial(s) in "
+                  f"{got.get('search_s')}s)")
+        if not got.get("manifest_roundtrip", False):
+            failures.append(
+                f"REGRESSION {name}: tuned config did not survive "
+                f"Accelerator.save/load_accelerator (manifest stamp "
+                f"mismatch)"
+            )
+        else:
+            print(f"ok   {name}.manifest_roundtrip: true")
+        if got.get("service_tuned_hits", 0) < 1:
+            failures.append(
+                f"REGRESSION {name}: serving resolved "
+                f"{got.get('service_tuned_hits')} tuned Target(s) — "
+                f"GraphService must pick persisted configs on submission"
+            )
+        else:
+            print(f"ok   {name}.service_tuned_hits: "
+                  f"{got.get('service_tuned_hits')}")
     for w in warnings:
         print(w)
     for f in failures:

@@ -47,6 +47,13 @@ Observability (off by default, near-zero cost when on):
     result = session.run(root=3)            # spans: compile/lower/bind/
     result.trace                            #   launch:<kernel>/...
     repro.telemetry.get().export_chrome("trace.json")  # chrome://tracing
+
+Autotuning (profile-guided Target search, persisted and reused):
+
+    report = repro.autotune.autotune(program, graph, params={"root": 3})
+    acc = program.lower(graph=graph, tuned=True)  # lookup, zero trials
+    repro.serve() resolves tuned Targets automatically (``tuned_hits``
+    in ``service.stats()``); ``python -m repro.autotune`` is the CLI.
 """
 
 from .core import (  # noqa: F401 - re-exported public API
@@ -72,6 +79,8 @@ from .frontend import FrontendError, GraphProgram  # noqa: F401
 from .graph.storage import GraphDelta, GraphUpdateError  # noqa: F401
 from .streaming import StreamingSession  # noqa: F401
 from . import telemetry  # noqa: F401
+from . import autotune  # noqa: F401
+from .autotune import AutoTuner, TunedConfig, TuningCache  # noqa: F401
 from .serving import (  # noqa: F401
     ArtifactRegistry,
     DeadlineExceeded,
@@ -119,5 +128,9 @@ __all__ = [
     "program_cache_info",
     "set_program_cache_limit",
     "telemetry",
+    "autotune",
+    "AutoTuner",
+    "TunedConfig",
+    "TuningCache",
     "__version__",
 ]

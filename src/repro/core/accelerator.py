@@ -362,22 +362,44 @@ class KernelPlan:
     compile_time_s: float = 0.0
 
 
+def _xla_estimates(compiled) -> Dict[str, Optional[float]]:
+    """Best-effort XLA cost/memory estimates for one AOT executable.
+
+    Interpreted/CPU backends (and deserialized executables on some JAX
+    versions) may not implement ``cost_analysis``/``memory_analysis``,
+    may return empty results, or may raise — every failure mode degrades
+    to explicit ``None`` estimates here. Callers (``report()``, the
+    :mod:`repro.autotune` cost model) treat ``None`` as "unknown"; an
+    unavailable estimate must never crash a report or a tuning trial.
+    """
+    est: Dict[str, Optional[float]] = {
+        "flops": None, "bytes_accessed": None,
+        "arg_bytes": None, "out_bytes": None, "temp_bytes": None,
+    }
+    if compiled is None:
+        return est
+    with contextlib.suppress(Exception):
+        cost = compiled.cost_analysis()
+        entry = cost[0] if isinstance(cost, (list, tuple)) else cost
+        if entry:
+            est["flops"] = float(entry.get("flops", 0.0)) or None
+            est["bytes_accessed"] = (
+                float(entry.get("bytes accessed", 0.0)) or None
+            )
+    with contextlib.suppress(Exception):
+        m = compiled.memory_analysis()
+        est["arg_bytes"] = int(m.argument_size_in_bytes)
+        est["out_bytes"] = int(m.output_size_in_bytes)
+        est["temp_bytes"] = int(m.temp_size_in_bytes)
+    return est
+
+
 def _kernel_plan(module, kern, compiled, mode, compile_time_s, shape) -> KernelPlan:
-    flops = bytes_accessed = None
-    arg_bytes = out_bytes = temp_bytes = None
-    if compiled is not None:
-        # cost/memory analyses are backend-optional: absent -> static fallback
-        with contextlib.suppress(Exception):
-            cost = compiled.cost_analysis()
-            entry = cost[0] if isinstance(cost, (list, tuple)) else cost
-            if entry:
-                flops = float(entry.get("flops", 0.0)) or None
-                bytes_accessed = float(entry.get("bytes accessed", 0.0)) or None
-        with contextlib.suppress(Exception):
-            m = compiled.memory_analysis()
-            arg_bytes = int(m.argument_size_in_bytes)
-            out_bytes = int(m.output_size_in_bytes)
-            temp_bytes = int(m.temp_size_in_bytes)
+    est = _xla_estimates(compiled)
+    flops, bytes_accessed = est["flops"], est["bytes_accessed"]
+    arg_bytes, out_bytes, temp_bytes = (
+        est["arg_bytes"], est["out_bytes"], est["temp_bytes"]
+    )
     if flops is None:
         # static fallback: one op-estimate per streamed lane per access
         lanes = shape.n_edges if kern.kind is mir.KernelKind.EDGE else shape.n_vertices
@@ -522,7 +544,8 @@ class Accelerator:
 
     def __init__(self, program: "Program", target: Target, shape: GraphShape,
                  *, _blobs: Optional[Dict[str, bytes]] = None,
-                 _profile: Optional[Dict[str, Any]] = None):
+                 _profile: Optional[Dict[str, Any]] = None,
+                 _tuned: Optional[Dict[str, Any]] = None):
         module = program.module
         if module.graph.weighted and not shape.weighted:
             raise AcceleratorError(
@@ -534,6 +557,13 @@ class Accelerator:
         self.shape = shape
         self.fingerprint = accelerator_fingerprint(
             program.fingerprint, target, shape
+        )
+        # provenance of an autotuned Target (a TunedConfig dict from
+        # repro.autotune, stamped by the tuner / tuned lowering paths);
+        # persisted in the artifact manifest so a warm-started process
+        # knows it runs a tuned substrate without re-searching
+        self.tuned: Optional[Dict[str, Any]] = (
+            dict(_tuned) if _tuned else None
         )
         # profiling baseline fed by traced runs (repro.telemetry): per span
         # name -> {count, total_s, max_s}; persisted in the artifact
@@ -741,6 +771,7 @@ class Accelerator:
             "determinism": self._determinism(),
             "kernels": kernels_manifest,
             "profile": self.profile(),
+            "tuned": self.tuned,
         }
         with open(os.path.join(path, "program.gt"), "w") as f:
             f.write(self.program.source)
@@ -860,5 +891,7 @@ def load_accelerator(path: str) -> Accelerator:
     target = Target.from_dict(manifest["target"])
     shape = GraphShape(**manifest["shape"])
     profile = manifest.get("profile")
+    tuned = manifest.get("tuned")
     return Accelerator(program, target, shape, _blobs=blobs or None,
-                       _profile=profile if isinstance(profile, dict) else None)
+                       _profile=profile if isinstance(profile, dict) else None,
+                       _tuned=tuned if isinstance(tuned, dict) else None)

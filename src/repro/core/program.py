@@ -250,7 +250,8 @@ class Program:
     def lower(self, target: "Optional[Target]" = None,
               shape: "Optional[GraphShape]" = None, *,
               graph: "Optional[GraphData]" = None,
-              bucket: bool = False) -> "Accelerator":
+              bucket: bool = False, tuned: bool = False,
+              tuning_cache=None) -> "Accelerator":
         """AOT-lower this program for a (target, shape bucket).
 
         The returned :class:`~repro.core.accelerator.Accelerator` has every
@@ -269,6 +270,15 @@ class Program:
         update slack. The caller binds ``graph.pad_to(shape.n_vertices,
         shape.n_edges)``, not the unpadded graph (``bind`` checks shapes
         exactly).
+
+        ``tuned=True`` consults the :mod:`repro.autotune` TuningCache for
+        this program's (MIR fingerprint x shape bucket) and, on a hit,
+        lowers with the tuned Target instead of the default — a pure
+        lookup with **zero search trials** (run ``python -m
+        repro.autotune`` or :func:`repro.autotune.autotune` offline to
+        populate the cache). On a miss the given/default target is used
+        unchanged. ``tuning_cache`` overrides the default cache location
+        (``<artifact store>/tuning``).
         """
         from .accelerator import Accelerator, GraphShape
         from .target import Target
@@ -288,7 +298,24 @@ class Program:
                 shape = GraphShape.of(graph)
         if target is None:
             target = Target.from_options(self.options)
-        return Accelerator(self, target, shape)
+        tuned_stamp = None
+        if tuned:
+            from ..autotune import (
+                TuningCache, default_tuning_dir, program_mir_fingerprint,
+                shape_bucket,
+            )
+
+            cache = tuning_cache if tuning_cache is not None else \
+                TuningCache(default_tuning_dir())
+            cfg = cache.get(
+                program_mir_fingerprint(self),
+                shape_bucket(graph=graph, shape=shape),
+                kind=target.kind,
+            )
+            if cfg is not None:
+                target = cfg.target
+                tuned_stamp = cfg.to_dict()
+        return Accelerator(self, target, shape, _tuned=tuned_stamp)
 
     # -- binding ------------------------------------------------------------
     def bind(self, graph: "GraphData", backend: str = "local", *,

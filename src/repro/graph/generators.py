@@ -84,6 +84,26 @@ def chain(n: int, weighted: bool = False) -> GraphData:
     return GraphData(n, src, dst, w)
 
 
+def deep_chain(n: int, multiplicity: int = 1000,
+               weighted: bool = False) -> GraphData:
+    """A diameter-``n`` chain with ``multiplicity`` parallel edges per hop
+    (both directions).
+
+    The frontier-compaction stress fixture: BFS walks ``n`` levels whose
+    frontiers are single vertices, while full-edge streaming pays the
+    whole ``2*(n-1)*multiplicity`` edge list at every level — the regime
+    where the direction optimization structurally pays (paper Fig. 2),
+    and the autotuner's gated workload.
+    """
+    f = np.arange(n - 1, dtype=np.int32)
+    src = np.concatenate([np.repeat(f, multiplicity),
+                          np.repeat(f + 1, multiplicity)])
+    dst = np.concatenate([np.repeat(f + 1, multiplicity),
+                          np.repeat(f, multiplicity)])
+    w = np.ones(src.shape[0], np.float32) if weighted else None
+    return GraphData(n, src, dst, w)
+
+
 def star(n: int, weighted: bool = False) -> GraphData:
     """Hub 0 points at everyone — the hub-cache stress fixture."""
     src = np.zeros(n - 1, dtype=np.int32)

@@ -22,6 +22,12 @@ in-place updates into the padding slack (no re-lowering), incremental repair
 for monotone programs — and per-version query latency plus update-apply
 latency are reported.
 
+``--autotune`` runs the :mod:`repro.autotune` search for the served
+(program, graph bucket) before the service starts; the winning Target
+persists in the TuningCache next to the artifact store, so this process
+and every later one resolve it by lookup (``tuned_hits`` in the stats
+snapshot) — a second ``--autotune`` start performs zero search trials.
+
 ``--artifact-dir DIR`` overrides the service's artifact registry location
 (default: ``$REPRO_ARTIFACT_DIR`` / ``~/.cache/repro-artifacts``): the
 program is AOT-lowered once per (program, target, shape bucket) into a
@@ -173,6 +179,27 @@ def serve_graph(args) -> int:
     max_batch = args.batch if args.batch and args.batch > 1 else 1
     mode = f"dynamic batching x{max_batch}" if max_batch > 1 else "per-query"
     registry_dir = args.artifact_dir if args.artifact_dir else None
+
+    if args.autotune:
+        # search BEFORE the service starts, against the same TuningCache
+        # the service resolves from — every submission below then picks
+        # the tuned Target via pure lookup (tuned_hits in the snapshot)
+        from ..autotune import AutoTuner, TuningCache, tuning_dir_for
+        from ..core.program import compile_program
+        from ..serving.registry import default_artifact_dir
+        from ..serving.service import NAMED_ALGORITHMS
+
+        store = registry_dir if registry_dir else default_artifact_dir()
+        tuner = AutoTuner(TuningCache(tuning_dir_for(store)), reps=2,
+                          max_candidates=8)
+        report = tuner.tune(
+            compile_program(NAMED_ALGORITHMS[args.graph]), graph,
+            params=queries[0],
+        )
+        how = ("cache hit, zero trials" if report.cache_hit
+               else f"{report.trials} trial(s)")
+        print(f"autotune: {report.config.target.describe()} "
+              f"({how}, {report.config.speedup:.2f}x over baseline)")
     print(f"serving {args.queries} {args.graph} queries on |V|={graph.n_vertices} "
           f"|E|={graph.n_edges} via repro.serve ({args.pool} workers, "
           f"{args.backend} backend, {mode})")
@@ -342,6 +369,12 @@ def main(argv=None):
                     help="graph path: warm-start from (or populate) a saved "
                          "Accelerator artifact directory — compile cost is "
                          "paid once per (program, target, shape), offline")
+    ap.add_argument("--autotune", action="store_true",
+                    help="graph path: run the repro.autotune search for "
+                         "(program, graph bucket) before serving; the "
+                         "service then resolves every submission through "
+                         "the persisted TuningCache (cache hits skip the "
+                         "search entirely)")
     ap.add_argument("--trace-dir", default=None,
                     help="graph path: enable repro.telemetry tracing and "
                          "write trace.json (chrome://tracing) plus "

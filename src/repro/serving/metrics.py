@@ -7,7 +7,7 @@ tier's observability contract is a *snapshot*, not a push pipeline:
 
 * global and per-tenant / per-program query counters (submitted,
   completed, errors, overloaded rejections, deadline rejections,
-  deadline misses) and latency percentiles,
+  deadline misses, tuned-config hits) and latency percentiles,
 * batch-formation accounting (batches, queries, occupancy against the
   scheduler's ``max_batch``),
 * registry traffic (resident hits, warm artifact loads, cold lowerings,
@@ -117,7 +117,7 @@ class _Group:
     __slots__ = (
         "submitted", "completed", "errors", "rejected_overloaded",
         "rejected_deadline", "rejections_analysis", "deadline_misses",
-        "latency",
+        "tuned_hits", "latency",
     )
 
     def __init__(self) -> None:
@@ -128,6 +128,7 @@ class _Group:
         self.rejected_deadline = 0
         self.rejections_analysis = 0
         self.deadline_misses = 0
+        self.tuned_hits = 0
         self.latency = LatencyHistogram()
 
     def snapshot(self) -> Dict[str, Any]:
@@ -139,6 +140,7 @@ class _Group:
             "rejected_deadline": self.rejected_deadline,
             "rejections_analysis": self.rejections_analysis,
             "deadline_misses": self.deadline_misses,
+            "tuned_hits": self.tuned_hits,
             "latency_ms": self.latency.snapshot(),
         }
 
@@ -207,6 +209,12 @@ class ServeMetrics:
         with self._lock:
             for g in self._groups(tenant, label):
                 g.errors += 1
+
+    def tuned_hit(self, tenant: str, label: str) -> None:
+        """A submission resolved its Target from the TuningCache."""
+        with self._lock:
+            for g in self._groups(tenant, label):
+                g.tuned_hits += 1
 
     # -- batch formation -----------------------------------------------------
     def batch(self, size: int) -> None:

@@ -16,6 +16,9 @@ next process). Multi-tenant policies (bounded queues with typed
 :class:`~repro.serving.scheduler.Overloaded` shedding, weighted
 fairness, per-request deadlines) ride on every call via ``tenant=`` /
 ``deadline_s=``; ``service.stats()`` exports the metrics snapshot.
+Unless a Target is pinned, every submission resolves its Target through
+the :mod:`repro.autotune` TuningCache (lookup only) — offline-tuned
+configs apply transparently and count as ``tuned_hits``.
 
 ``repro.run(src_or_program, graph, **params)`` is the module-level
 one-shot convenience: it routes through a process-wide default
@@ -108,6 +111,13 @@ class GraphService:
         ``backend`` picks the substrate kind per program (resolved from
         each program's options); an explicit ``target`` pins one
         :class:`~repro.core.target.Target` for every submission.
+    autotune
+        When True (the default) and no explicit ``target`` is pinned,
+        each submission's Target is resolved through the
+        :class:`~repro.autotune.TuningCache` colocated with the artifact
+        store — a pure lookup keyed on (MIR fingerprint x shape bucket),
+        never a search. Hits are counted per tenant/program as
+        ``tuned_hits`` in :meth:`stats`.
     workers / max_batch / max_wait_s / max_queue / tenant_weights
         Scheduler shape: executor width, batch-formation cap and
         fill-wait, per-tenant admission bound, fairness weights
@@ -130,8 +140,11 @@ class GraphService:
         tenant_weights: Optional[Dict[str, float]] = None,
         max_resident: int = 8,
         max_accelerators: int = 32,
+        autotune: bool = True,
         options=None,
     ) -> None:
+        from ..autotune import TuningCache, tuning_dir_for
+
         if registry_dir is None:
             store: Optional[str] = default_artifact_dir()
         elif registry_dir is False:
@@ -141,6 +154,10 @@ class GraphService:
         self.backend = backend
         self.options = options
         self._target = target
+        self.autotune = bool(autotune)
+        # memory-only when the registry is (store=None): tuned configs
+        # still apply within the process once something puts them there
+        self.tuning = TuningCache(tuning_dir_for(store))
         self.metrics = ServeMetrics(max_batch=max_batch)
         self.registry = ArtifactRegistry(
             store, max_resident=max_resident,
@@ -171,10 +188,28 @@ class GraphService:
         label = getattr(program_or_name, "name", None)
         return program, str(label) if label else program.fingerprint[:12]
 
-    def _target_for(self, program: Program) -> Target:
+    def _target_for(self, program: Program,
+                    graph=None) -> Tuple[Target, bool]:
+        """(Target, tuned) for one submission.
+
+        An explicit pinned target always wins (the operator opted out of
+        tuning); otherwise a TuningCache hit for (program MIR x graph
+        shape bucket x backend) swaps in the tuned Target — lookup only,
+        zero search trials.
+        """
         if self._target is not None:
-            return self._target
-        return program.options.resolve_target(kind=self.backend)
+            return self._target, False
+        resolved = program.options.resolve_target(kind=self.backend)
+        if self.autotune and graph is not None:
+            from ..autotune import program_mir_fingerprint, shape_bucket
+
+            cfg = self.tuning.get(
+                program_mir_fingerprint(program), shape_bucket(graph=graph),
+                kind=self.backend,
+            )
+            if cfg is not None:
+                return cfg.target, True
+        return resolved, False
 
     # -- execution (called by scheduler workers) -----------------------------
     def _execute(self, job, param_sets):
@@ -222,7 +257,10 @@ class GraphService:
             self.metrics.rejected(tenant, label, "analysis")
             raise ProgramRejected(label, analysis.errors)
         coerced = program.validate_params(params)
-        target = self._target_for(program)
+        target, tuned = self._target_for(program, graph)
+        if tuned:
+            self.metrics.tuned_hit(tenant, label)
+            sp.set(tuned=True)
         job = (program, graph, target)
         group_key = (
             program.fingerprint, id(graph), target, frozenset(coerced)
@@ -252,7 +290,9 @@ class GraphService:
         if self._closed:
             raise ServiceClosed("GraphService is closed")
         program, _ = self._resolve_program(program_or_name)
-        target = self._target_for(program)
+        # updates must land on the binding queries run against: resolve
+        # through the same tuned-target lookup as the submit path
+        target, _ = self._target_for(program, graph)
         entry = self.registry.acquire(program, graph, target)
         try:
             return entry.update(delta)
@@ -263,6 +303,10 @@ class GraphService:
         """JSON-serializable metrics snapshot (see serving/metrics.py)."""
         snap = self.metrics.snapshot()
         snap["registry"] = {**snap["registry"], **self.registry.info()}
+        snap["tuning"] = {
+            "enabled": self.autotune, "store_dir": self.tuning.store_dir,
+            **self.tuning.stats(),
+        }
         tr = tel.get()
         if tr.enabled:
             snap["telemetry"] = tr.prometheus_text()

@@ -35,6 +35,9 @@ Tracing is **off by default**: the module-level tracer is a
 :class:`~repro.telemetry.tracer.NullTracer` whose spans are preallocated
 no-ops, and instrumentation sites guard on ``tracer.enabled`` — ci_bench
 gates the overhead of both states (``telemetry_overhead``).
+
+For always-on production use, ``tel.enable(sample=0.1)`` keeps ~10% of
+traces (decided once per root span; kept traces stay complete).
 """
 from __future__ import annotations
 
@@ -71,17 +74,32 @@ _install_lock = threading.Lock()
 _active: Union[Tracer, NullTracer] = NULL_TRACER
 
 
-def enable(max_spans: int = 200_000) -> Tracer:
+def enable(max_spans: int = 200_000, *, sample: Optional[float] = None,
+           seed: Optional[int] = None) -> Tracer:
     """Install (or return) the process-wide recording tracer.
 
     Idempotent: a second ``enable()`` returns the already-active tracer
     (its retained spans intact) so independent layers can call it without
     clobbering each other.
+
+    ``sample`` enables head-based trace sampling: each new *root* span is
+    kept with probability ``sample`` (``enable(sample=0.1)`` records ~10%
+    of traces); descendants follow their root's decision so kept traces
+    stay complete. ``None`` (the default) leaves an already-active
+    tracer's rate untouched and means "record everything" on first
+    enable. ``seed`` makes the sampling sequence deterministic and only
+    applies when the tracer is first created.
     """
     global _active
     with _install_lock:
         if not isinstance(_active, Tracer):
-            _active = Tracer(max_spans=max_spans)
+            _active = Tracer(max_spans=max_spans,
+                             sample=1.0 if sample is None else sample,
+                             seed=seed)
+        elif sample is not None:
+            if not 0.0 <= sample <= 1.0:
+                raise ValueError(f"sample must be in [0, 1], got {sample!r}")
+            _active.sample = float(sample)
         return _active
 
 

@@ -29,9 +29,16 @@ Design constraints, in priority order:
 Durations use ``time.perf_counter()`` throughout; the tracer records one
 wall-clock anchor at construction so exporters can place spans on an
 absolute timeline without per-span ``time.time()`` calls.
+Head-based **trace sampling** keeps always-on tracing cheap at high QPS:
+``Tracer(sample=0.1)`` (or ``repro.telemetry.enable(sample=0.1)``) makes
+the keep-or-drop decision once per *root* span — a dropped root installs
+a sampled-out marker in the context so every descendant span of that
+trace is a preallocated no-op, never a half-recorded tree. Sampling is
+seedable for deterministic tests.
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from contextvars import ContextVar
@@ -49,6 +56,11 @@ __all__ = [
 _CURRENT: ContextVar[Optional[Tuple[int, int]]] = ContextVar(
     "repro_telemetry_current", default=None
 )
+
+# ambient marker installed by a sampled-out root span: descendants see a
+# negative trace id and short-circuit to NULL_SPAN (whole-trace drops,
+# never partial trees)
+_SAMPLED_OUT = (-1, -1)
 
 # distinct span names get their own histogram up to this many; the rest
 # aggregate under "other" (guards against unbounded label cardinality)
@@ -152,6 +164,33 @@ class _NullSpan:
 NULL_SPAN = _NullSpan()
 
 
+class _SampledOutSpan:
+    """Root span of a dropped trace: records nothing, but installs the
+    sampled-out marker so every descendant short-circuits to NULL_SPAN.
+    One instance per dropped root (it carries a context token)."""
+
+    __slots__ = ("_token",)
+
+    def __init__(self) -> None:
+        self._token = None
+
+    def set(self, **attrs: Any) -> "_SampledOutSpan":
+        return self
+
+    def context(self) -> None:
+        return None  # nothing to parent under: the trace does not exist
+
+    def __enter__(self) -> "_SampledOutSpan":
+        self._token = _CURRENT.set(_SAMPLED_OUT)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if self._token is not None:
+            _CURRENT.reset(self._token)
+            self._token = None
+        return False
+
+
 class Tracer:
     """Thread-safe span recorder with bounded retention.
 
@@ -163,7 +202,10 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, max_spans: int = 200_000) -> None:
+    def __init__(self, max_spans: int = 200_000, *, sample: float = 1.0,
+                 seed: Optional[int] = None) -> None:
+        if not 0.0 <= sample <= 1.0:
+            raise ValueError("sample must be in [0.0, 1.0]")
         self.max_spans = max_spans
         self._lock = threading.Lock()
         self._spans: List[Span] = []
@@ -173,6 +215,12 @@ class Tracer:
         # perf_counter -> wall-clock anchor for absolute-timeline export
         self.epoch_s = time.time() - time.perf_counter()
         self._hist: Dict[str, Any] = {}
+        # head-based trace sampling: the keep/drop decision is made once
+        # per root span; sampled_out counts dropped *traces* (descendant
+        # spans of a dropped trace are no-ops and are not counted)
+        self.sample = float(sample)
+        self.sampled_out = 0
+        self._rng = random.Random(seed)
 
     # -- id allocation -------------------------------------------------------
     def _alloc_id(self) -> int:
@@ -194,16 +242,31 @@ class Tracer:
         cross-thread handoff path. Without it, the innermost open span in
         this execution context is the parent; a parentless span roots a
         new trace.
+
+        With ``sample < 1.0``, a would-be root span is kept with
+        probability ``sample``; a dropped root returns a no-op that marks
+        the context, so the *whole* trace (every descendant span) is
+        dropped — summaries never see partial trees. Cross-thread work
+        parented under a dropped root (its ``context()`` is None, so the
+        handoff passes ``parent=None``) makes its own sampling decision.
         """
-        sid = self._alloc_id()
         if parent is not None:
             trace_id, parent_id = parent.trace_id, parent.span_id
         else:
             cur = _CURRENT.get()
             if cur is not None:
+                if cur[0] < 0:  # inside a sampled-out trace
+                    return NULL_SPAN
                 trace_id, parent_id = cur
             else:
-                trace_id, parent_id = sid, None
+                if self.sample < 1.0 and self._rng.random() >= self.sample:
+                    with self._lock:
+                        self.sampled_out += 1
+                    return _SampledOutSpan()
+                trace_id, parent_id = None, None
+        sid = self._alloc_id()
+        if trace_id is None:
+            trace_id = sid
         return Span(self, name, sid, trace_id, parent_id, attrs)
 
     def record_span(self, name: str, t_start: float, t_end: float, *,
@@ -216,15 +279,22 @@ class Tracer:
         leaves the queue, from its recorded submit time.
         """
         sp = self.span(name, parent=parent, **attrs)
+        if not isinstance(sp, Span):  # sampled out / inside a dropped trace
+            return sp
         sp.t_start = t_start
         sp.t_end = t_end
         self._finish(sp)
         return sp
 
     def current(self) -> Optional[SpanContext]:
-        """The innermost open span's context (for cross-thread handoff)."""
+        """The innermost open span's context (for cross-thread handoff).
+
+        Inside a sampled-out trace this is None — handed-off work then
+        roots its own trace and makes its own sampling decision."""
         cur = _CURRENT.get()
-        return SpanContext(*cur) if cur is not None else None
+        if cur is None or cur[0] < 0:
+            return None
+        return SpanContext(*cur)
 
     def _finish(self, span: Span) -> None:
         with self._lock:
@@ -250,6 +320,7 @@ class Tracer:
             self._spans.clear()
             self._hist.clear()
             self.dropped = 0
+            self.sampled_out = 0
 
     def histograms(self) -> Dict[str, Any]:
         """Merged copy of the per-span-name duration histograms."""

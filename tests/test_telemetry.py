@@ -285,3 +285,119 @@ def test_batched_runs_share_one_trace_summary(tracer):
     assert trace["span_count"] >= 1
     run_spans = [s for s in tracer.spans() if s.name == "run"]
     assert any(s.attrs.get("batch_size", 0) >= 1 for s in run_spans)
+
+
+# --------------------------------------------------------------------------
+# head-based trace sampling (always-on production tracing)
+# --------------------------------------------------------------------------
+
+
+def test_sample_zero_drops_whole_traces():
+    tr = telemetry.tracer.Tracer(sample=0.0)
+    with tr.span("root") as root:
+        # the whole trace is dropped: descendants are no-ops, the context
+        # never leaks a half-recorded tree
+        assert root.context() is None
+        assert tr.current() is None
+        with tr.span("child") as child:
+            assert child is telemetry.NULL_SPAN
+            with tr.span("grandchild"):
+                pass
+    assert tr.spans() == []
+    assert tr.sampled_out == 1  # one dropped *trace*, not three spans
+    assert tr.summarize()["span_count"] == 0
+
+
+def test_sample_one_keeps_everything():
+    tr = telemetry.tracer.Tracer(sample=1.0)
+    for _ in range(20):
+        with tr.span("root"):
+            with tr.span("child"):
+                pass
+    assert len(tr.spans()) == 40
+    assert tr.sampled_out == 0
+
+
+def test_sampling_is_per_root_and_seed_deterministic():
+    def kept_roots(seed):
+        tr = telemetry.tracer.Tracer(sample=0.5, seed=seed)
+        kept = []
+        for i in range(200):
+            with tr.span("root", i=i):
+                with tr.span("child"):
+                    pass
+        kept = sorted(s.attrs["i"] for s in tr.spans() if s.name == "root")
+        # every kept root kept its child too; every dropped root dropped it
+        n_roots = len(kept)
+        assert len(tr.spans()) == 2 * n_roots
+        assert tr.sampled_out == 200 - n_roots
+        return kept
+
+    a, b = kept_roots(seed=7), kept_roots(seed=7)
+    assert a == b
+    assert 0 < len(a) < 200  # actually sampling, not all-or-nothing
+    assert kept_roots(seed=8) != a
+
+
+def test_explicit_parent_bypasses_sampling():
+    # cross-thread handoff: a span with an explicit parent token belongs
+    # to an already-kept trace — it must never be re-sampled away
+    tr = telemetry.tracer.Tracer(sample=0.0)
+    ctx = telemetry.tracer.SpanContext(trace_id=42, span_id=42)
+    with tr.span("handed-off", parent=ctx) as sp:
+        assert sp is not telemetry.NULL_SPAN
+    assert [s.name for s in tr.spans()] == ["handed-off"]
+    assert tr.spans()[0].trace_id == 42
+
+
+def test_record_span_respects_sampling():
+    tr = telemetry.tracer.Tracer(sample=0.0)
+    sp = tr.record_span("queue_wait", 0.0, 1.0)
+    assert sp is not None  # no-op stand-in, never an AttributeError
+    assert tr.spans() == []
+    assert tr.sampled_out == 1
+
+
+def test_reset_zeroes_sampled_out_counter():
+    tr = telemetry.tracer.Tracer(sample=0.0)
+    with tr.span("root"):
+        pass
+    assert tr.sampled_out == 1
+    tr.reset()
+    assert tr.sampled_out == 0
+
+
+def test_enable_sample_validates_and_updates_in_place():
+    tr = telemetry.enable(sample=0.25, seed=3)
+    try:
+        assert tr.sample == 0.25
+        # re-enable with an explicit rate retunes the active tracer
+        same = telemetry.enable(sample=1.0)
+        assert same is tr
+        assert tr.sample == 1.0
+        # without an explicit rate, enable() leaves the rate alone
+        telemetry.enable()
+        assert tr.sample == 1.0
+        with pytest.raises(ValueError):
+            telemetry.enable(sample=1.5)
+        with pytest.raises(ValueError):
+            telemetry.tracer.Tracer(sample=-0.1)
+    finally:
+        telemetry.disable()
+
+
+def test_sampled_trace_still_counts_engine_runs(tracer):
+    # a sampled-out run must still *execute* normally — sampling drops
+    # telemetry, never work. sample=0.0 on the active tracer, then run.
+    telemetry.enable(sample=0.0)
+    g = generators.chain(64)
+    acc = repro.compile(sources.BFS_ECP).lower(graph=g)
+    session = acc.bind(g)
+    try:
+        res = session.run(root=0)
+    finally:
+        session.close()
+    assert (np.asarray(res.properties["old_level"]) >= 0).sum() == 64
+    assert res.trace is None  # dropped trace -> no per-run summary
+    assert tracer.sampled_out >= 1
+    assert tracer.spans() == []
